@@ -1,0 +1,32 @@
+"""Paper Table 4 + Fig. 7: Instant-NGP baseline vs the Instant-3D algorithm.
+
+Instant-3D = decomposed grids with S_D:S_C = 1:0.25 and F_D:F_C = 1:0.5
+(paper §5.1).  Reports runtime + PSNR for both, plus the runtime ratio
+(paper: 60s vs 72s on Xavier NX = 0.83x)."""
+from dataclasses import replace
+
+from . import common
+
+
+def run():
+    # Instant-NGP baseline: single grid (decomposed=False), same total budget
+    ngp_field = replace(common.BASE_FIELD, decomposed=False)
+    ngp = common.train_and_eval(ngp_field, common.BASE_TRAIN)
+    common.emit("table4_algo[instant-ngp]", ngp["runtime_s"] * 1e6 / common.BASE_TRAIN.iters,
+                f"psnr={ngp['psnr_rgb']:.2f};runtime_s={ngp['runtime_s']:.1f}")
+
+    # Instant-3D: S_D:S_C = 1:0.25 (log2 delta -2), F_D:F_C = 1:0.5
+    i3d_field = replace(
+        common.BASE_FIELD,
+        log2_table_color=common.BASE_FIELD.log2_table_density - 2,
+    )
+    i3d_train = replace(common.BASE_TRAIN, f_color=0.5)
+    i3d = common.train_and_eval(i3d_field, i3d_train)
+    ratio = i3d["runtime_s"] / ngp["runtime_s"]
+    common.emit("table4_algo[instant-3d]", i3d["runtime_s"] * 1e6 / i3d_train.iters,
+                f"psnr={i3d['psnr_rgb']:.2f};runtime_s={i3d['runtime_s']:.1f};vs_ngp={ratio:.2f}x")
+    return {"ngp": ngp, "i3d": i3d, "ratio": ratio}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Paper Figs. 4/7: training-step runtime breakdown by pipeline stage.
+
+Times each step of the pipeline separately (sample rays / encode (Step 3-1)
+/ MLP (Step 3-2) / composite (Step 4) / full fwd+bwd) and reports the
+fraction attributable to grid interpolation + its backward — the paper's
+~80% bottleneck claim."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common
+from repro.core import Field
+from repro.core.rendering import sample_ts
+from repro.core import encoding
+from repro.data import RaySampler
+
+
+def run():
+    scene, ds = common.dataset()
+    field = Field(common.BASE_FIELD)
+    params = field.init(jax.random.PRNGKey(0))
+    sampler = RaySampler(ds)
+    batch = sampler.sample(jax.random.PRNGKey(1), common.BASE_TRAIN.n_rays)
+    ts = sample_ts(jax.random.PRNGKey(2), common.BASE_TRAIN.n_rays, common.RENDER)
+    pts = (batch.origins[:, None] + ts[..., None] * batch.dirs[:, None]).reshape(-1, 3)
+    pts = jnp.clip((pts + 1.5) / 3.0, 0, 1 - 1e-6)
+    dirs = jnp.broadcast_to(batch.dirs[:, None], (ts.shape[0], ts.shape[1], 3)).reshape(-1, 3)
+
+    us = {}
+    enc_fwd = jax.jit(lambda p, tb: field.density_enc(p, tb))
+    us["encode_fwd"] = common.timeit(enc_fwd, pts, params["density_grid"], iters=10)
+
+    enc_bwd = jax.jit(jax.grad(lambda tb: field.density_enc(pts, tb).sum()))
+    us["encode_bwd"] = common.timeit(enc_bwd, params["density_grid"], iters=10)
+
+    mlp = jax.jit(lambda p: field.query(p, pts, dirs))
+    us["full_field_query"] = common.timeit(mlp, params, iters=10)
+
+    def full_loss(p):
+        sigma, rgb = field.query(p, pts, dirs)
+        return jnp.mean(sigma) + jnp.mean(rgb)
+    us["full_fwd_bwd"] = common.timeit(jax.jit(jax.grad(full_loss)), params, iters=5)
+
+    grid_us = us["encode_fwd"] + us["encode_bwd"]
+    frac = grid_us / us["full_fwd_bwd"]
+    for k, v in us.items():
+        common.emit(f"fig4_breakdown[{k}]", v, "")
+    common.emit("fig4_breakdown[grid_interp_fraction]", grid_us,
+                f"fraction_of_step={frac:.1%};paper_claims=~80%")
+    return us
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Paper Table 1: PSNR vs training time for density:color grid-size ratios.
+
+S_D:S_C in {1:1 (Instant-NGP), 0.25:1, 1:0.25 (Instant-3D)} — the paper's
+finding is that shrinking the COLOR grid 4x keeps PSNR while shrinking the
+density grid loses it."""
+from dataclasses import replace
+
+from . import common
+
+
+ROWS = [
+    ("1:1", 0, 0),        # log2 deltas applied to (density, color)
+    ("0.25:1", -2, 0),    # density table / 4
+    ("1:0.25", 0, -2),    # color table / 4  (paper's winning row)
+]
+
+
+def run():
+    results = []
+    for name, d_delta, c_delta in ROWS:
+        fcfg = replace(
+            common.BASE_FIELD,
+            log2_table_density=common.BASE_FIELD.log2_table_density + d_delta,
+            log2_table_color=common.BASE_FIELD.log2_table_color + c_delta,
+        )
+        out = common.train_and_eval(fcfg, common.BASE_TRAIN)
+        results.append((name, out))
+        common.emit(
+            f"table1_grid_sizes[{name}]",
+            out["runtime_s"] * 1e6 / common.BASE_TRAIN.iters,
+            f"psnr={out['psnr_rgb']:.2f};depth_psnr={out['psnr_depth']:.2f};runtime_s={out['runtime_s']:.1f}",
+        )
+    return results
+
+
+if __name__ == "__main__":
+    run()

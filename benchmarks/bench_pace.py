@@ -1,0 +1,34 @@
+"""Paper Fig. 5: color features learn faster than density features.
+
+Tracks RGB-PSNR vs depth-PSNR along the training trajectory; the paper's
+claim (and the motivation for the whole decomposition) is that the color
+curve leads the density curve."""
+import jax
+
+from . import common
+from repro.core import Field, Instant3DTrainer
+from repro.data import RaySampler
+
+
+def run():
+    scene, ds = common.dataset()
+    field = Field(common.BASE_FIELD)
+    tr = Instant3DTrainer(field, common.BASE_TRAIN)
+    state = tr.init(jax.random.PRNGKey(0))
+    sampler = RaySampler(ds)
+    trace = []
+    for chunk in range(4):
+        state, _ = tr.train(state, sampler, iters=40, log_every=40)
+        ev = tr.evaluate(state.params, ds, views=[0])
+        trace.append((40 * (chunk + 1), ev["psnr_rgb"], ev["psnr_depth"]))
+        common.emit(
+            f"fig5_pace[iter{40*(chunk+1)}]", 0.0,
+            f"psnr_rgb={ev['psnr_rgb']:.2f};psnr_depth={ev['psnr_depth']:.2f}",
+        )
+    leads = sum(1 for _, rgb, dep in trace if rgb >= dep)
+    common.emit("fig5_pace[color_leads_density]", 0.0, f"{leads}/{len(trace)} checkpoints")
+    return trace
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""Shared benchmark scaffolding: tiny scenes, trainers, timing, CSV emit.
+
+Budget note: this container is a single CPU core, so benchmark configs are
+scaled down (32x32 views, 8-12 views, <=200 iterations).  All comparisons are
+*relative* — the paper's tables compare configurations against each other on
+fixed hardware, and the same ratios are what we reproduce.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+
+import jax
+import numpy as np
+
+from repro.core import Field, FieldConfig, Instant3DTrainer, TrainerConfig, occupancy
+from repro.core.rendering import RenderConfig
+from repro.data import build_dataset, RaySampler
+
+RENDER = RenderConfig(n_samples=24)
+
+BASE_FIELD = FieldConfig(
+    n_levels=6, max_resolution=96, log2_table_density=13, log2_table_color=11
+)
+
+BASE_TRAIN = TrainerConfig(
+    n_rays=512, iters=160, render=RENDER,
+    occ=occupancy.OccupancyConfig(update_interval=16, warmup_steps=32),
+)
+
+_DATASETS = {}
+
+
+def dataset(seed: int = 0, n_views: int = 8, hw: int = 32):
+    key = (seed, n_views, hw)
+    if key not in _DATASETS:
+        _DATASETS[key] = build_dataset(seed=seed, n_views=n_views, h=hw, w=hw,
+                                       cfg=RENDER, gt_samples=96)
+    return _DATASETS[key]
+
+
+def train_and_eval(field_cfg: FieldConfig, train_cfg: TrainerConfig, seed: int = 0):
+    """Returns dict(runtime_s, psnr_rgb, psnr_depth, loss_curve)."""
+    scene, ds = dataset(seed)
+    field = Field(field_cfg)
+    tr = Instant3DTrainer(field, train_cfg)
+    state = tr.init(jax.random.PRNGKey(0))
+    sampler = RaySampler(ds)
+    # warm up compile outside the timed region
+    state, _ = tr.train(state, sampler, iters=2, log_every=2)
+    t0 = time.perf_counter()
+    state, hist = tr.train(state, sampler, iters=train_cfg.iters, log_every=40)
+    runtime = time.perf_counter() - t0
+    ev = tr.evaluate(state.params, ds, views=[0, 1])
+    return {
+        "runtime_s": runtime,
+        "psnr_rgb": ev["psnr_rgb"],
+        "psnr_depth": ev["psnr_depth"],
+        "loss": hist["loss"],
+    }
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timeit(fn, *args, iters=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us

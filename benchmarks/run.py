@@ -1,0 +1,51 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Usage:
+
+    PYTHONPATH=src python -m benchmarks.run             # everything
+    PYTHONPATH=src python -m benchmarks.run --only fig18,table4
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = [
+    ("fig4_breakdown", "bench_breakdown"),
+    ("fig5_pace", "bench_pace"),
+    ("table1_grid_sizes", "bench_grid_sizes"),
+    ("table2_update_freq", "bench_update_freq"),
+    ("table4_algo", "bench_algo"),
+    ("fig8_10_access_patterns", "bench_access_patterns"),
+    ("fig16_18_kernels", "bench_kernels"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated name substrings")
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name, module in SUITES:
+        if only and not any(o in name for o in only):
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{module}", fromlist=["run"])
+            mod.run()
+            print(f"# {name} done in {time.time()-t0:.0f}s", file=sys.stderr)
+        except Exception:
+            failures.append(name)
+            print(f"# {name} FAILED:\n{traceback.format_exc()}", file=sys.stderr)
+    if failures:
+        print(f"# FAILED suites: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Small-LM pretraining loop: sharded synthetic data, AdamW, fault-tolerant
+driver with checkpoints + auto-resume.  Loss visibly decreases (the stream
+has learnable bigram structure).
+
+    PYTHONPATH=src python examples/lm_pretrain.py --arch qwen1.5-0.5b --steps 60
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.data import SyntheticLMStream, LMStreamConfig
+from repro.models.lm import LM
+from repro.optim import AdamW, schedule
+from repro.runtime import TrainDriver, DriverConfig, resume_or_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    model = LM(cfg)
+    opt = AdamW(lr=schedule.warmup_cosine(3e-3, 10, args.steps), clip_norm=1.0,
+                weight_decay=0.01)
+
+    stream = SyntheticLMStream(LMStreamConfig(cfg.vocab, args.seq, args.batch))
+
+    @jax.jit
+    def train_step(state, batch):
+        params, opt_state = state
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, opt_state = opt.apply(params, grads, opt_state)
+        return (params, opt_state), loss
+
+    def step_fn(state, batch):
+        batch = {"tokens": jax.numpy.asarray(batch["tokens"])}
+        state, loss = train_step(state, batch)
+        return state, {"loss": float(loss)}
+
+    ckpt = CheckpointManager(args.ckpt_dir, keep_last=2, async_save=False)
+    params0 = model.init(jax.random.PRNGKey(0))
+    template = (params0, opt.init(params0))
+    state, start = resume_or_init(ckpt, template, lambda: template)
+    if start:
+        print(f"auto-resumed at step {start}")
+
+    drv = TrainDriver(DriverConfig(total_steps=args.steps, checkpoint_every=25,
+                                   log_every=10), ckpt)
+    losses = []
+
+    def wrapped(state, batch):
+        state, m = step_fn(state, batch)
+        losses.append(m["loss"])
+        if len(losses) % 10 == 0:
+            print(f"step {start + len(losses):4d}  loss {m['loss']:.4f}")
+        return state, m
+
+    state, summary = drv.run(state, wrapped, stream.iterator(start_step=start),
+                             start_step=start)
+    print(f"done: {summary}; loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    assert losses[-1] < losses[0], "loss must decrease on structured data"
+
+
+if __name__ == "__main__":
+    main()

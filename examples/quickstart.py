@@ -1,0 +1,46 @@
+"""Quickstart: reconstruct a procedural scene with Instant-3D in ~2 minutes on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+
+from repro.core import Field, FieldConfig, Instant3DTrainer, TrainerConfig, occupancy
+from repro.core.rendering import RenderConfig
+from repro.data import build_dataset, RaySampler
+
+
+def main():
+    print("== Instant-3D quickstart (paper config, scaled to CPU) ==")
+    render = RenderConfig(n_samples=24)
+    t0 = time.time()
+    scene, ds = build_dataset(seed=0, n_views=10, h=40, w=40, cfg=render, gt_samples=96)
+    print(f"built procedural scene + {ds.images.shape[0]} GT views in {time.time()-t0:.1f}s")
+
+    # Instant-3D: decomposed grids, S_D:S_C = 1:0.25, F_D:F_C = 1:0.5 (paper §5.1)
+    field = Field(FieldConfig(
+        n_levels=6, max_resolution=96,
+        log2_table_density=13, log2_table_color=11,   # S_D : S_C = 1 : 0.25
+    ))
+    trainer = Instant3DTrainer(field, TrainerConfig(
+        n_rays=512, iters=200, f_density=1.0, f_color=0.5, render=render,
+        occ=occupancy.OccupancyConfig(update_interval=16, warmup_steps=32),
+    ))
+    state = trainer.init(jax.random.PRNGKey(0))
+    print("params:", {k: f"{v:,}" for k, v in field.param_counts(state.params).items()})
+
+    t0 = time.time()
+    state, hist = trainer.train(state, RaySampler(ds), log_every=50,
+                                callback=lambda i, p, h: print(
+                                    f"  iter {i:4d}  loss {h['loss'][-1]:.5f}  "
+                                    f"live {h['live_fraction'][-1]:.0%}"))
+    print(f"trained {trainer.cfg.iters} iters in {time.time()-t0:.1f}s")
+
+    ev = trainer.evaluate(state.params, ds, views=[0, 1])
+    print(f"PSNR: rgb={ev['psnr_rgb']:.2f} dB  depth={ev['psnr_depth']:.2f} dB "
+          f"(paper's instant target: >25 dB rgb)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""End-to-end Instant-3D training driver: checkpointing, preemption safety,
+auto-resume, straggler watchdog — the production loop around the paper's
+algorithm.
+
+    PYTHONPATH=src python examples/train_nerf_instant3d.py \
+        --scene-seed 0 --iters 300 --ckpt-dir /tmp/i3d_ckpt --auto-resume
+
+Kill it mid-run (Ctrl-C) and re-run with --auto-resume: it continues from the
+last atomic checkpoint with the exact data stream.
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import Field, FieldConfig, Instant3DTrainer, TrainerConfig, occupancy
+from repro.core.rendering import RenderConfig
+from repro.data import build_dataset, RaySampler
+from repro.runtime import DriverConfig, StragglerStats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scene-seed", type=int, default=0)
+    ap.add_argument("--iters", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/i3d_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--auto-resume", action="store_true")
+    ap.add_argument("--sd-sc", default="1:0.25", help="grid size ratio S_D:S_C")
+    ap.add_argument("--fd-fc", default="1:0.5", help="update freq ratio F_D:F_C")
+    args = ap.parse_args()
+
+    render = RenderConfig(n_samples=24)
+    scene, ds = build_dataset(seed=args.scene_seed, n_views=12, h=48, w=48,
+                              cfg=render, gt_samples=128)
+
+    sc = float(args.sd_sc.split(":")[1])
+    fc = float(args.fd_fc.split(":")[1])
+    log2_c = 13 + round(np.log2(sc) / 3 * 3)  # 1:0.25 -> -2 levels
+    field = Field(FieldConfig(n_levels=6, max_resolution=96,
+                              log2_table_density=13,
+                              log2_table_color=int(13 + np.log2(sc))))
+    trainer = Instant3DTrainer(field, TrainerConfig(
+        n_rays=768, iters=args.iters, f_color=fc, render=render,
+        occ=occupancy.OccupancyConfig(update_interval=16, warmup_steps=32),
+    ))
+
+    ckpt = CheckpointManager(args.ckpt_dir, keep_last=2)
+    state = trainer.init(jax.random.PRNGKey(0))
+    start = 0
+    if args.auto_resume and ckpt.latest_step() is not None:
+        tmpl = {"params": state.params, "opt": state.opt_state,
+                "occ": state.occ_state.density_ema}
+        restored, meta = ckpt.restore(tmpl)
+        state = state._replace(
+            params=restored["params"], opt_state=restored["opt"],
+            occ_state=occupancy.OccupancyState(
+                jax.numpy.asarray(restored["occ"]), jax.numpy.zeros((), jax.numpy.int32)),
+            step=int(meta["step"]),
+        )
+        start = int(meta["step"])
+        print(f"resumed from step {start}")
+
+    watchdog = StragglerStats()
+    done = start
+    while done < args.iters:
+        chunk = min(args.ckpt_every, args.iters - done)
+        t0 = time.perf_counter()
+        state, hist = trainer.train(state, RaySampler(ds), iters=chunk, log_every=chunk)
+        dt = (time.perf_counter() - t0) / chunk
+        if watchdog.update(dt, sigma=4.0, alpha=0.1):
+            print(f"[straggler] step time {dt:.3f}s vs ewma {watchdog.ewma:.3f}s")
+        done += chunk
+        ckpt.save(done, {"params": state.params, "opt": state.opt_state,
+                         "occ": state.occ_state.density_ema})
+        print(f"step {done:5d}  loss {hist['loss'][-1]:.5f}  ({dt:.3f}s/iter)  ckpt saved")
+
+    ckpt.wait()
+    ev = trainer.evaluate(state.params, ds, views=[0, 1, 2])
+    print(f"final PSNR rgb={ev['psnr_rgb']:.2f} depth={ev['psnr_depth']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

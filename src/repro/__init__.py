@@ -1,0 +1,16 @@
+"""repro — Instant-3D (ISCA'23) on TPU: JAX/Pallas training framework.
+
+Layers:
+    repro.core      — the paper's contribution (decomposed hash-grid NeRF training)
+    repro.kernels   — Pallas TPU kernels + pure-jnp oracles
+    repro.models    — LM model zoo (10 assigned architectures)
+    repro.parallel  — mesh axes + partition rules (DP/FSDP/TP/EP/SP)
+    repro.optim     — AdamW, schedules, grad compression
+    repro.checkpoint— atomic/async/elastic checkpointing
+    repro.runtime   — fault-tolerant training driver
+    repro.data      — procedural scenes, ray sampler, LM token streams
+    repro.configs   — architecture + shape registries
+    repro.launch    — production mesh, dry-run, roofline, train/serve entries
+"""
+
+__version__ = "1.0.0"

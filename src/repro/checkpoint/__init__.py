@@ -1,0 +1,1 @@
+from .manager import CheckpointManager, tree_to_flat, flat_to_tree  # noqa: F401

@@ -1,0 +1,83 @@
+"""The 4 assigned input-shape suites + `input_specs()` (ShapeDtypeStruct
+stand-ins, weak-type-correct, shardable, no device allocation).
+
+    train_4k      seq 4096,    global_batch 256   -> train_step
+    prefill_32k   seq 32768,   global_batch 32    -> prefill (serve)
+    decode_32k    seq 32768,   global_batch 128   -> decode_step (1 new token,
+                                                     KV cache of seq_len)
+    long_500k     seq 524288,  global_batch 1     -> decode_step; SSM/hybrid only
+
+Applicability rules (DESIGN.md §5): long_500k is skipped for pure
+full-attention archs; all archs here have a decode step.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.lm import LM
+
+
+@dataclass(frozen=True)
+class Shape:
+    name: str
+    seq: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped)."""
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return False, "pure full-attention arch: 0.5M-token dense KV decode is quadratic-cost; skipped per assignment rules (DESIGN.md §5)"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    """ShapeDtypeStruct batch for the step function of `shape.kind`."""
+    b, s = shape.global_batch, shape.seq
+    d = cfg.d_model
+    if shape.kind == "train":
+        batch = {"tokens": _sds((b, s), jnp.int32)}
+        if cfg.frontend == "vision_stub":
+            batch["embeds"] = _sds((b, s, d), jnp.bfloat16)
+            batch["positions"] = _sds((3, b, s), jnp.int32)
+        elif cfg.frontend == "audio_stub":
+            batch["encoder_embeds"] = _sds((b, cfg.encoder_seq, d), jnp.bfloat16)
+        return batch
+    if shape.kind == "prefill":
+        batch = {}
+        if cfg.frontend == "vision_stub":
+            batch["embeds"] = _sds((b, s, d), jnp.bfloat16)
+            batch["positions"] = _sds((3, b, s), jnp.int32)
+        else:
+            batch["tokens"] = _sds((b, s), jnp.int32)
+        if cfg.frontend == "audio_stub":
+            batch["encoder_embeds"] = _sds((b, cfg.encoder_seq, d), jnp.bfloat16)
+        return batch
+    # decode: one token + caches sized seq
+    model = LM(cfg)
+    caches = jax.eval_shape(lambda: model.init_caches(b, s))
+    batch = {
+        "tokens": _sds((b, 1), jnp.int32),
+        "pos": _sds((b, 1), jnp.int32),
+        "caches": caches,
+    }
+    if cfg.enc_dec:
+        batch["encoder_out"] = _sds((b, cfg.encoder_seq, d), jnp.bfloat16)
+    return batch

@@ -1,0 +1,6 @@
+"""The paper's contribution: Instant-3D decomposed hash-grid NeRF training."""
+from .encoding import HashEncoding, HashGridConfig, sh_encoding, sh_dim  # noqa: F401
+from .field import Field, FieldConfig, trunc_exp  # noqa: F401
+from .rendering import RenderConfig, RayBatch, render_rays, sample_ts, pixel_rays, sphere_poses  # noqa: F401
+from .trainer import Instant3DTrainer, TrainerConfig, TrainState  # noqa: F401
+from . import losses, occupancy  # noqa: F401

@@ -1,0 +1,144 @@
+"""Radiance fields: Instant-NGP baseline and the Instant-3D decomposition.
+
+Instant-NGP (paper §2.1, Fig. 3): one hash grid -> density MLP -> (sigma,
+geo features); color MLP eats (geo features, SH(dir)).
+
+Instant-3D (paper §3, Fig. 6): the grid is decomposed into a *density grid*
+and a smaller *color grid* (S_D > S_C).  The density branch is
+density-grid -> density MLP -> sigma; the color branch is
+color-grid ⊕ SH(dir) -> color MLP -> rgb.  The clean split is what allows
+the two branches to use different table sizes and update frequencies.
+
+Both fields are pure-functional: `init` builds a param pytree, `query` maps
+(params, points, dirs) -> (sigma, rgb).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field as dc_field
+
+import jax
+import jax.numpy as jnp
+
+from . import encoding as enc
+from ..kernels.fused_mlp import ops as mlp_ops
+
+
+# --- truncated exp: density activation with clipped-gradient stability ---
+
+@jax.custom_vjp
+def trunc_exp(x):
+    return jnp.exp(jnp.clip(x, -15.0, 11.0))
+
+def _te_fwd(x):
+    return trunc_exp(x), x
+
+def _te_bwd(x, g):
+    return (g * jnp.exp(jnp.clip(x, -15.0, 11.0)),)
+
+trunc_exp.defvjp(_te_fwd, _te_bwd)
+
+
+@dataclass(frozen=True)
+class FieldConfig:
+    # grid geometry (shared by both branches; table sizes differ)
+    n_levels: int = 16
+    n_features: int = 2
+    base_resolution: int = 16
+    max_resolution: int = 1024
+    # Instant-3D: S_D : S_C = 1 : 0.25  ->  color table 4x smaller (§5.1)
+    log2_table_density: int = 18
+    log2_table_color: int = 16
+    decomposed: bool = True         # False => Instant-NGP baseline
+    # MLPs (Instant-NGP sizes: <=3 layers, 64 hidden)
+    hidden: int = 64
+    geo_features: int = 15          # density MLP extra outputs (NGP baseline)
+    sh_degree: int = 4
+    # kernels
+    backend: str = "ref"
+    merged_backward: bool = True
+    grid_dtype: str = "float32"
+
+    def grid_cfg(self, branch: str) -> enc.HashGridConfig:
+        log2_t = self.log2_table_density if branch == "density" else self.log2_table_color
+        return enc.HashGridConfig(
+            n_levels=self.n_levels,
+            n_features=self.n_features,
+            log2_table_size=log2_t,
+            base_resolution=self.base_resolution,
+            max_resolution=self.max_resolution,
+            backend=self.backend,
+            merged_backward=self.merged_backward,
+        )
+
+
+def _init_linear(rng, d_in, d_out):
+    """He-uniform, as in tiny-cuda-nn's fully-fused MLP init."""
+    bound = (6.0 / d_in) ** 0.5
+    w = jax.random.uniform(rng, (d_in, d_out), minval=-bound, maxval=bound, dtype=jnp.float32)
+    return w, jnp.zeros((d_out,), jnp.float32)
+
+
+class Field:
+    """Shared machinery; `decomposed` flag switches NGP <-> Instant-3D."""
+
+    def __init__(self, cfg: FieldConfig):
+        self.cfg = cfg
+        self.density_enc = enc.HashEncoding(cfg.grid_cfg("density"))
+        self.color_enc = enc.HashEncoding(cfg.grid_cfg("color")) if cfg.decomposed else None
+        self.sh_dim = enc.sh_dim(cfg.sh_degree)
+
+    # ---- params ----
+
+    def init(self, rng: jax.Array) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(rng, 8)
+        dtype = jnp.dtype(cfg.grid_dtype)
+        enc_dim = self.density_enc.cfg.out_dim
+
+        params = {"density_grid": self.density_enc.init(keys[0], dtype)}
+        # density MLP: enc -> hidden -> 1 + geo
+        w1, b1 = _init_linear(keys[1], enc_dim, cfg.hidden)
+        w2, b2 = _init_linear(keys[2], cfg.hidden, 1 + cfg.geo_features)
+        params["density_mlp"] = {"w1": w1, "b1": b1, "w2": w2, "b2": b2}
+
+        if cfg.decomposed:
+            params["color_grid"] = self.color_enc.init(keys[3], dtype)
+            color_in = self.color_enc.cfg.out_dim + self.sh_dim
+        else:
+            color_in = cfg.geo_features + self.sh_dim
+        # color MLP: color_in -> hidden -> hidden -> 3
+        w1, b1 = _init_linear(keys[4], color_in, cfg.hidden)
+        w2, b2 = _init_linear(keys[5], cfg.hidden, cfg.hidden)
+        w3, b3 = _init_linear(keys[6], cfg.hidden, 3)
+        params["color_mlp"] = {"w1": w1, "b1": b1, "w2": w2, "b2": b2, "w3": w3, "b3": b3}
+        return params
+
+    # ---- queries ----
+
+    def density(self, params: dict, points: jnp.ndarray):
+        """points (N,3) in [0,1) -> (sigma (N,), geo (N, geo_features))."""
+        h = self.density_enc(points, params["density_grid"])
+        m = params["density_mlp"]
+        out = mlp_ops.mlp2(h, m["w1"], m["b1"], m["w2"], m["b2"], backend=self.cfg.backend)
+        return trunc_exp(out[..., 0]), out[..., 1:]
+
+    def query(self, params: dict, points: jnp.ndarray, dirs: jnp.ndarray):
+        """-> (sigma (N,), rgb (N,3)).  dirs must be unit-norm."""
+        sigma, geo = self.density(params, points)
+        sh = enc.sh_encoding(dirs, self.cfg.sh_degree)
+        if self.cfg.decomposed:
+            hc = self.color_enc(points, params["color_grid"])
+            cin = jnp.concatenate([hc, sh], axis=-1)
+        else:
+            cin = jnp.concatenate([geo, sh], axis=-1)
+        m = params["color_mlp"]
+        raw = mlp_ops.mlp3(
+            cin, m["w1"], m["b1"], m["w2"], m["b2"], m["w3"], m["b3"],
+            backend=self.cfg.backend,
+        )
+        return sigma, jax.nn.sigmoid(raw)
+
+    # ---- bookkeeping ----
+
+    def param_counts(self, params: dict) -> dict:
+        return {k: sum(x.size for x in jax.tree_util.tree_leaves(v)) for k, v in params.items()}

@@ -1,0 +1,16 @@
+"""Reconstruction loss (paper Eq. 2) and PSNR."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mse(pred: jnp.ndarray, gt: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(jnp.square(pred.astype(jnp.float32) - gt.astype(jnp.float32)))
+
+
+def psnr_from_mse(m: jnp.ndarray) -> jnp.ndarray:
+    return -10.0 * jnp.log10(jnp.maximum(m, 1e-10))
+
+
+def psnr(pred: jnp.ndarray, gt: jnp.ndarray) -> jnp.ndarray:
+    return psnr_from_mse(mse(pred, gt))

@@ -1,0 +1,67 @@
+"""Occupancy grid: empty-space skipping for ray marching (Instant-NGP §3).
+
+A coarse binary grid over the unit cube.  Periodically, cell densities are
+re-queried (cell centers + jitter), folded into an EMA, and thresholded.
+During rendering, samples in unoccupied cells are culled before the field
+query — on the paper's accelerator this is what keeps the interpolation
+count near 200k/iteration instead of |rays| x |samples|.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OccupancyConfig:
+    resolution: int = 32
+    ema_decay: float = 0.95
+    density_threshold: float = 0.5
+    update_interval: int = 16
+    warmup_steps: int = 64          # all-occupied until the field knows something
+
+
+class OccupancyState(NamedTuple):
+    density_ema: jnp.ndarray  # (R^3,) f32
+    step: jnp.ndarray         # int32
+
+
+def init_state(cfg: OccupancyConfig) -> OccupancyState:
+    r3 = cfg.resolution ** 3
+    return OccupancyState(jnp.full((r3,), 1e4, jnp.float32), jnp.zeros((), jnp.int32))
+
+
+def cell_centers(cfg: OccupancyConfig) -> jnp.ndarray:
+    r = cfg.resolution
+    axis = (jnp.arange(r, dtype=jnp.float32) + 0.5) / r
+    gx, gy, gz = jnp.meshgrid(axis, axis, axis, indexing="ij")
+    return jnp.stack([gx, gy, gz], axis=-1).reshape(-1, 3)  # (R^3, 3)
+
+
+def update(field, params: dict, state: OccupancyState, cfg: OccupancyConfig, rng: jax.Array) -> OccupancyState:
+    """Requery cell densities at jittered centers, EMA-fold."""
+    pts = cell_centers(cfg)
+    jitter = (jax.random.uniform(rng, pts.shape) - 0.5) / cfg.resolution
+    sigma, _ = field.density(params, jnp.clip(pts + jitter, 0.0, 1.0 - 1e-6))
+    ema = jnp.maximum(state.density_ema * cfg.ema_decay, sigma)
+    return OccupancyState(ema, state.step + 1)
+
+
+def occupied_mask_fn(state: OccupancyState, cfg: OccupancyConfig):
+    """Returns points_unit (N,3) -> bool (N,) culling closure for render_rays."""
+    r = cfg.resolution
+    bitfield = state.density_ema > cfg.density_threshold  # (R^3,)
+
+    def mask(points_unit: jnp.ndarray) -> jnp.ndarray:
+        cell = jnp.clip((points_unit * r).astype(jnp.int32), 0, r - 1)
+        flat = cell[:, 0] * r * r + cell[:, 1] * r + cell[:, 2]
+        return bitfield[flat]
+
+    return mask
+
+
+def occupancy_fraction(state: OccupancyState, cfg: OccupancyConfig) -> jnp.ndarray:
+    return jnp.mean((state.density_ema > cfg.density_threshold).astype(jnp.float32))

@@ -1,0 +1,139 @@
+"""Rays, sampling, and differentiable volume rendering (paper Steps 1-4).
+
+Scene convention: contents live inside an axis-aligned box `aabb` (default
+[-1.5, 1.5]^3); sample positions are normalized to [0,1)^3 before hitting the
+hash grids.  Rendering composes with the volume_render kernel stack.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.volume_render import ops as vr_ops
+
+
+@dataclass(frozen=True)
+class RenderConfig:
+    n_samples: int = 48
+    near: float = 2.0
+    far: float = 6.0
+    aabb_min: float = -1.5
+    aabb_max: float = 1.5
+    white_background: bool = True
+    stratified: bool = True
+    backend: str = "ref"
+
+
+class RayBatch(NamedTuple):
+    origins: jnp.ndarray    # (B, 3)
+    dirs: jnp.ndarray       # (B, 3) unit norm
+    rgb_gt: jnp.ndarray     # (B, 3) ground-truth pixel colors (training only)
+
+
+# --- cameras -----------------------------------------------------------------
+
+def look_at_pose(eye: np.ndarray, target: np.ndarray, up=(0.0, 0.0, 1.0)) -> np.ndarray:
+    """OpenGL-style camera-to-world (3, 4): columns = [right, up, -forward | eye]."""
+    eye = np.asarray(eye, np.float32)
+    forward = target - eye
+    forward = forward / np.linalg.norm(forward)
+    right = np.cross(forward, np.asarray(up, np.float32))
+    right = right / np.linalg.norm(right)
+    true_up = np.cross(right, forward)
+    return np.stack([right, true_up, -forward, eye], axis=1).astype(np.float32)
+
+
+def sphere_poses(n_views: int, radius: float = 4.0, elevation_deg: float = 30.0, seed: int = 0) -> np.ndarray:
+    """(V, 3, 4) poses on a view sphere looking at the origin (NeRF-Synthetic style)."""
+    rng = np.random.default_rng(seed)
+    poses = []
+    for i in range(n_views):
+        az = 2 * np.pi * i / n_views + rng.uniform(0, 0.1)
+        el = np.deg2rad(elevation_deg + rng.uniform(-12, 12))
+        eye = radius * np.array(
+            [np.cos(az) * np.cos(el), np.sin(az) * np.cos(el), np.sin(el)], np.float32
+        )
+        poses.append(look_at_pose(eye, np.zeros(3, np.float32)))
+    return np.stack(poses)
+
+
+def pixel_rays(pose: jnp.ndarray, px: jnp.ndarray, py: jnp.ndarray, h: int, w: int, focal: float):
+    """Rays through pixel centers. pose (3,4); px, py (B,) -> origins, dirs (B,3)."""
+    x = (px.astype(jnp.float32) + 0.5 - w * 0.5) / focal
+    y = -(py.astype(jnp.float32) + 0.5 - h * 0.5) / focal
+    dirs_cam = jnp.stack([x, y, -jnp.ones_like(x)], axis=-1)  # (B, 3)
+    dirs = dirs_cam @ pose[:3, :3].T
+    dirs = dirs / jnp.linalg.norm(dirs, axis=-1, keepdims=True)
+    origins = jnp.broadcast_to(pose[:3, 3], dirs.shape)
+    return origins, dirs
+
+
+# --- sampling ----------------------------------------------------------------
+
+def sample_ts(rng: jax.Array | None, n_rays: int, cfg: RenderConfig) -> jnp.ndarray:
+    """Stratified sample distances (B, S) in [near, far]."""
+    s = cfg.n_samples
+    edges = jnp.linspace(cfg.near, cfg.far, s + 1)
+    lo, hi = edges[:-1], edges[1:]
+    if cfg.stratified and rng is not None:
+        u = jax.random.uniform(rng, (n_rays, s))
+    else:
+        u = jnp.full((n_rays, s), 0.5)
+    return lo[None, :] + u * (hi - lo)[None, :]
+
+
+def normalize_points(points: jnp.ndarray, cfg: RenderConfig) -> jnp.ndarray:
+    """World -> [0,1)^3 grid coords, clipped to the box."""
+    unit = (points - cfg.aabb_min) / (cfg.aabb_max - cfg.aabb_min)
+    return jnp.clip(unit, 0.0, 1.0 - 1e-6)
+
+
+def inside_aabb(points: jnp.ndarray, cfg: RenderConfig) -> jnp.ndarray:
+    return jnp.all((points >= cfg.aabb_min) & (points <= cfg.aabb_max), axis=-1)
+
+
+# --- rendering ---------------------------------------------------------------
+
+def render_rays(
+    field,
+    params: dict,
+    origins: jnp.ndarray,
+    dirs: jnp.ndarray,
+    ts: jnp.ndarray,
+    cfg: RenderConfig,
+    occupancy_mask_fn=None,
+):
+    """Differentiable render. origins/dirs (B,3), ts (B,S) -> dict of outputs.
+
+    occupancy_mask_fn: optional (points_unit (N,3) -> bool (N,)) culling hook;
+    masked samples contribute zero density (paper/NGP empty-space skipping).
+    """
+    b, s = ts.shape
+    points = origins[:, None, :] + ts[..., None] * dirs[:, None, :]  # (B, S, 3)
+    flat_pts = points.reshape(-1, 3)
+    unit = normalize_points(flat_pts, cfg)
+    live = inside_aabb(flat_pts, cfg)
+    if occupancy_mask_fn is not None:
+        live = live & occupancy_mask_fn(unit)
+
+    flat_dirs = jnp.broadcast_to(dirs[:, None, :], points.shape).reshape(-1, 3)
+    sigma, rgb = field.query(params, unit, flat_dirs)
+    sigma = jnp.where(live, sigma, 0.0).reshape(b, s)
+    rgb = rgb.reshape(b, s, 3)
+
+    deltas = jnp.diff(ts, axis=-1, append=ts[:, -1:] + (cfg.far - cfg.near) / s)
+    out = vr_ops.composite(sigma, rgb, deltas, ts, backend=cfg.backend)
+    color = out.color
+    if cfg.white_background:
+        color = color + (1.0 - out.opacity[..., None])
+    return {
+        "rgb": color,
+        "depth": out.depth,
+        "opacity": out.opacity,
+        "weights": out.weights,
+        "live_fraction": jnp.mean(live.astype(jnp.float32)),
+    }

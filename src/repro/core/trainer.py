@@ -1,0 +1,211 @@
+"""Instant-3D training loop (paper §3 + §5.1 settings).
+
+The paper's two algorithm knobs are first-class here:
+
+* different grid sizes: `FieldConfig.log2_table_density/color` (S_D : S_C);
+* different update frequencies: `f_density`, `f_color` in [0, 1].  An
+  iteration updates branch b iff floor(i*F_b) > floor((i-1)*F_b).  Frozen
+  branches are routed through `stop_gradient` (their gradient scatter
+  disappears from the backward HLO — the compute saving is real, not masked)
+  and the optimizer skips their moments (`AdamW.apply(mask=...)`).
+
+Two jitted step functions are compiled once (freeze_color True/False); the
+scheduler picks per-iteration, mirroring the accelerator "skipping one
+back-propagation every 1/(1-F) iterations" (paper §4.6).
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field as dc_field
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import field as field_lib
+from . import losses, occupancy, rendering
+from ..optim import AdamW
+
+# note: the sampler/dataset arguments below are duck-typed (repro.data types);
+# importing repro.data here would create a package cycle
+
+
+@dataclass(frozen=True)
+class TrainerConfig:
+    n_rays: int = 1024
+    iters: int = 400
+    lr: float = 1e-2
+    eps: float = 1e-15              # Instant-NGP's Adam epsilon
+    b2: float = 0.99
+    mlp_weight_decay: float = 1e-6
+    # update frequencies, F_D : F_C = 1 : 0.5 by default (paper §5.1)
+    f_density: float = 1.0
+    f_color: float = 0.5
+    use_occupancy: bool = True
+    occ: occupancy.OccupancyConfig = dc_field(default_factory=occupancy.OccupancyConfig)
+    render: rendering.RenderConfig = dc_field(default_factory=rendering.RenderConfig)
+    seed: int = 0
+    eval_chunk: int = 4096
+
+
+def _branch_update(i: int, freq: float) -> bool:
+    """Whether branch with frequency `freq` updates at iteration i (0-based)."""
+    if freq >= 1.0:
+        return True
+    return math.floor((i + 1) * freq) > math.floor(i * freq)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    occ_state: occupancy.OccupancyState
+    step: int
+
+
+class Instant3DTrainer:
+    def __init__(self, field: field_lib.Field, cfg: TrainerConfig):
+        self.field = field
+        self.cfg = cfg
+
+        def lr_scale(path):
+            # grids at full lr, MLPs at 0.1x — the NGP recipe
+            return 1.0 if any("grid" in p for p in path) else 0.1
+
+        self.opt = AdamW(
+            lr=cfg.lr, b2=cfg.b2, eps=cfg.eps, weight_decay=0.0, lr_scale_fn=lr_scale
+        )
+        self._step_fns = {}
+
+    # ---- state ----
+
+    def init(self, rng: jax.Array) -> TrainState:
+        params = self.field.init(rng)
+        return TrainState(
+            params=params,
+            opt_state=self.opt.init(params),
+            occ_state=occupancy.init_state(self.cfg.occ),
+            step=0,
+        )
+
+    # ---- jitted step ----
+
+    def _make_step(self, freeze_color: bool, freeze_density: bool = False):
+        field, cfg, opt = self.field, self.cfg, self.opt
+        decomposed = field.cfg.decomposed
+
+        def loss_fn(params, batch: rendering.RayBatch, ts, occ_ema):
+            if freeze_color and decomposed:
+                params = dict(params)
+                params["color_grid"] = jax.lax.stop_gradient(params["color_grid"])
+            if freeze_density:
+                params = dict(params)
+                params["density_grid"] = jax.lax.stop_gradient(params["density_grid"])
+            mask_fn = None
+            if cfg.use_occupancy:
+                state = occupancy.OccupancyState(occ_ema, jnp.zeros((), jnp.int32))
+                mask_fn = occupancy.occupied_mask_fn(state, cfg.occ)
+            out = rendering.render_rays(
+                field, params, batch.origins, batch.dirs, ts, cfg.render, mask_fn
+            )
+            return losses.mse(out["rgb"], batch.rgb_gt), out["live_fraction"]
+
+        def step(params, opt_state, batch, ts, occ_ema):
+            (loss, live), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch, ts, occ_ema
+            )
+            mask = jax.tree.map(lambda _: True, params)
+            if freeze_color:
+                mask["color_grid"] = False
+            if freeze_density:
+                mask["density_grid"] = False
+            params, opt_state = opt.apply(params, grads, opt_state, mask=mask)
+            return params, opt_state, loss, live
+
+        return jax.jit(step, donate_argnums=(0, 1))
+
+    def step_fn(self, freeze_color: bool, freeze_density: bool = False):
+        key = (freeze_color, freeze_density)
+        if key not in self._step_fns:
+            self._step_fns[key] = self._make_step(freeze_color, freeze_density)
+        return self._step_fns[key]
+
+    # ---- driver ----
+
+    def train(
+        self,
+        state: TrainState,
+        sampler,
+        iters: int | None = None,
+        log_every: int = 50,
+        callback=None,
+    ) -> tuple[TrainState, dict]:
+        cfg = self.cfg
+        iters = iters if iters is not None else cfg.iters
+        key = jax.random.PRNGKey(cfg.seed)
+        history = {"step": [], "loss": [], "live_fraction": [], "wall_s": []}
+        t0 = time.perf_counter()
+
+        params, opt_state, occ_state = state.params, state.opt_state, state.occ_state
+        for local_i in range(iters):
+            i = state.step + local_i
+            key_batch, key_ts, key_occ = jax.random.split(jax.random.fold_in(key, i), 3)
+            batch = sampler.sample(key_batch, cfg.n_rays)
+            ts = rendering.sample_ts(key_ts, cfg.n_rays, cfg.render)
+
+            update_color = _branch_update(i, cfg.f_color)
+            update_density = _branch_update(i, cfg.f_density)
+            freeze_color = (not update_color) and self.field.cfg.decomposed
+            freeze_density = not update_density
+
+            step = self.step_fn(freeze_color, freeze_density)
+            params, opt_state, loss, live = step(
+                params, opt_state, batch, ts, occ_state.density_ema
+            )
+
+            if cfg.use_occupancy and i >= cfg.occ.warmup_steps and (i + 1) % cfg.occ.update_interval == 0:
+                occ_state = occupancy.update(self.field, params, occ_state, cfg.occ, key_occ)
+
+            if (local_i + 1) % log_every == 0 or local_i == iters - 1:
+                history["step"].append(i + 1)
+                history["loss"].append(float(loss))
+                history["live_fraction"].append(float(live))
+                history["wall_s"].append(time.perf_counter() - t0)
+                if callback is not None:
+                    callback(i + 1, params, history)
+
+        return TrainState(params, opt_state, occ_state, state.step + iters), history
+
+    # ---- evaluation ----
+
+    def render_image(self, params, pose: np.ndarray, ds):
+        cfg = self.cfg
+        h, w = ds.h, ds.w
+        py, px = jnp.meshgrid(jnp.arange(h), jnp.arange(w), indexing="ij")
+        px, py = px.reshape(-1), py.reshape(-1)
+        rgb_out, dep_out = [], []
+        for i in range(0, px.shape[0], cfg.eval_chunk):
+            o, d = rendering.pixel_rays(
+                jnp.asarray(pose), px[i : i + cfg.eval_chunk], py[i : i + cfg.eval_chunk],
+                h, w, ds.focal,
+            )
+            ts = rendering.sample_ts(None, o.shape[0], cfg.render)
+            out = rendering.render_rays(self.field, params, o, d, ts, cfg.render)
+            rgb_out.append(out["rgb"])
+            dep_out.append(out["depth"])
+        rgb = jnp.concatenate(rgb_out).reshape(h, w, 3)
+        dep = jnp.concatenate(dep_out).reshape(h, w)
+        return np.asarray(rgb), np.asarray(dep)
+
+    def evaluate(self, params, ds, views=None) -> dict:
+        """PSNR of rendered RGB and depth vs ground truth (paper Fig. 5 stats)."""
+        views = views if views is not None else range(min(4, ds.images.shape[0]))
+        rgb_ps, dep_ps = [], []
+        for v in views:
+            rgb, dep = self.render_image(params, ds.poses[v], ds)
+            rgb_ps.append(float(losses.psnr(jnp.asarray(rgb), jnp.asarray(ds.images[v]))))
+            # depth normalized to [0,1] over the far range for a bounded PSNR
+            far = self.cfg.render.far
+            dep_ps.append(float(losses.psnr(jnp.asarray(dep / far), jnp.asarray(ds.depths[v] / far))))
+        return {"psnr_rgb": float(np.mean(rgb_ps)), "psnr_depth": float(np.mean(dep_ps))}

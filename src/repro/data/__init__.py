@@ -1,0 +1,3 @@
+from .synthetic_scene import SceneParams, SceneDataset, make_scene, build_dataset  # noqa: F401
+from .rays_dataset import RaySampler  # noqa: F401
+from .lm_data import SyntheticLMStream, LMStreamConfig  # noqa: F401

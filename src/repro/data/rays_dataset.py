@@ -1,0 +1,36 @@
+"""Pixel/ray batch sampling (paper Step 1-2): random pixels across all views."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import rendering
+from .synthetic_scene import SceneDataset
+
+
+class RaySampler:
+    """Samples (origins, dirs, rgb_gt) batches from a posed image set.
+
+    Precomputes all rays once (V*H*W rows) and draws uniform batches with a
+    jax PRNG — deterministic given the step's key, so training restarts
+    reproduce the exact stream (checkpoint/restart invariant).
+    """
+
+    def __init__(self, ds: SceneDataset):
+        v, h, w = ds.images.shape[:3]
+        origins = np.zeros((v, h * w, 3), np.float32)
+        dirs = np.zeros((v, h * w, 3), np.float32)
+        py, px = jnp.meshgrid(jnp.arange(h), jnp.arange(w), indexing="ij")
+        px, py = px.reshape(-1), py.reshape(-1)
+        for i in range(v):
+            o, d = rendering.pixel_rays(jnp.asarray(ds.poses[i]), px, py, h, w, ds.focal)
+            origins[i], dirs[i] = np.asarray(o), np.asarray(d)
+        self.origins = jnp.asarray(origins.reshape(-1, 3))
+        self.dirs = jnp.asarray(dirs.reshape(-1, 3))
+        self.rgb = jnp.asarray(ds.images.reshape(-1, 3))
+        self.n = self.rgb.shape[0]
+
+    def sample(self, rng: jax.Array, batch: int) -> rendering.RayBatch:
+        idx = jax.random.randint(rng, (batch,), 0, self.n)
+        return rendering.RayBatch(self.origins[idx], self.dirs[idx], self.rgb[idx])

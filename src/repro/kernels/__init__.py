@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical compute of Instant-3D.
+
+Each subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper with backend routing), ref.py (pure-jnp oracle used both for
+allclose validation and as the CPU/autodiff path).
+"""
+from . import hash_encode, grid_update, fused_mlp, volume_render  # noqa: F401

@@ -1,0 +1,38 @@
+"""Jitted wrappers for the fused NeRF MLPs with backend routing + padding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref
+
+
+def _pad_rows(x, multiple):
+    n = x.shape[0]
+    if n % multiple == 0:
+        return x, n
+    pad = multiple - n % multiple
+    return jnp.concatenate([x, jnp.zeros((pad, x.shape[1]), x.dtype)]), n
+
+
+def mlp2(x, w1, b1, w2, b2, *, backend: str = "ref", block_rows: int = _kernel.DEFAULT_BLOCK_ROWS):
+    if backend == "pallas":
+        xp, n = _pad_rows(x, block_rows)
+        out = _kernel.fused_mlp2(
+            xp, w1, b1, w2, b2, block_rows=block_rows,
+            interpret=jax.default_backend() != "tpu",
+        )
+        return out[:n]
+    return ref.mlp2(x, w1, b1, w2, b2)
+
+
+def mlp3(x, w1, b1, w2, b2, w3, b3, *, backend: str = "ref", block_rows: int = _kernel.DEFAULT_BLOCK_ROWS):
+    if backend == "pallas":
+        xp, n = _pad_rows(x, block_rows)
+        out = _kernel.fused_mlp3(
+            xp, w1, b1, w2, b2, w3, b3, block_rows=block_rows,
+            interpret=jax.default_backend() != "tpu",
+        )
+        return out[:n]
+    return ref.mlp3(x, w1, b1, w2, b2, w3, b3)

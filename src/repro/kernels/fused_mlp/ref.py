@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the small NeRF MLPs (Instant-NGP Step 3-2).
+
+Instant-NGP replaces vanilla NeRF's 10x256 MLP with tiny MLPs (<= 3 layers,
+64 hidden units).  The density branch is 1 hidden layer -> 16 outputs (first
+output is the density logit); the color branch is 2 hidden layers -> 3 RGB
+channels.  The oracle is the autodiff path used in training; the Pallas kernel
+(kernel.py) is the fused inference path (MLP-unit analogue, DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mlp2(x, w1, b1, w2, b2):
+    """x (N,Din) -> relu(x@w1+b1) @ w2 + b2, f32 accumulation."""
+    h = jnp.maximum(x.astype(jnp.float32) @ w1.astype(jnp.float32) + b1, 0.0)
+    return h @ w2.astype(jnp.float32) + b2
+
+
+def mlp3(x, w1, b1, w2, b2, w3, b3):
+    """Two hidden relu layers then a linear head."""
+    h1 = jnp.maximum(x.astype(jnp.float32) @ w1.astype(jnp.float32) + b1, 0.0)
+    h2 = jnp.maximum(h1 @ w2.astype(jnp.float32) + b2, 0.0)
+    return h2 @ w3.astype(jnp.float32) + b3

@@ -1,0 +1,104 @@
+"""Jitted wrappers for BUM-style merged grid updates.
+
+`merged_scatter_add` is the production path: sort-by-address + run merge +
+unique scatter.  It is mathematically identical to the naive duplicate
+scatter-add (ref.py) but removes write collisions — the TPU analogue of the
+paper's BUM unit (DESIGN.md §3).  On CPU the merge runs in pure XLA; on TPU
+the commit stage can be served by the Pallas kernel (`use_pallas=True`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+
+
+def _sort_updates(idx: jnp.ndarray, vals: jnp.ndarray, table_size: int, pad_to: int | None):
+    """Sort the update stream by address; pad with spill-row entries."""
+    order = jnp.argsort(idx)
+    idx_s = idx[order]
+    vals_s = vals[order]
+    if pad_to is not None and idx.shape[0] % pad_to != 0:
+        pad = pad_to - idx.shape[0] % pad_to
+        idx_s = jnp.concatenate([idx_s, jnp.full((pad,), table_size, jnp.int32)])
+        vals_s = jnp.concatenate([vals_s, jnp.zeros((pad,) + vals.shape[1:], vals.dtype)])
+    return idx_s, vals_s
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def merged_scatter_add(
+    table: jnp.ndarray,
+    idx: jnp.ndarray,
+    vals: jnp.ndarray,
+    *,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """table (T,F) += vals (M,F) at rows idx (M,) with BUM-merged writes."""
+    t = table.shape[0]
+    if use_pallas:
+        idx_s, vals_s = _sort_updates(idx, vals, t, _kernel.DEFAULT_BLOCK)
+        return _kernel.bum_scatter_pallas(table, idx_s, vals_s, interpret=interpret)
+
+    idx_s, vals_s = _sort_updates(idx, vals, t, None)
+    m = idx_s.shape[0]
+    is_start = jnp.concatenate([jnp.ones((1,), bool), idx_s[1:] != idx_s[:-1]])
+    seg_id = jnp.cumsum(is_start) - 1  # (M,)
+    summed = jax.ops.segment_sum(vals_s.astype(jnp.float32), seg_id, num_segments=m)
+    # Representative address per run; empty trailing segments get INT32_MAX
+    # from segment_min's identity and are dropped by the scatter.
+    seg_idx = jax.ops.segment_min(idx_s, seg_id, num_segments=m)
+    return table.at[seg_idx].add(summed.astype(table.dtype), mode="drop")
+
+
+@jax.jit
+def num_unique_addresses(idx: jnp.ndarray) -> jnp.ndarray:
+    """How many unique table rows a batch of updates touches (Fig. 10 stat)."""
+    s = jnp.sort(idx)
+    return jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]]).sum()
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def windowed_scatter_add(
+    table: jnp.ndarray,
+    idx: jnp.ndarray,
+    vals: jnp.ndarray,
+    *,
+    window: int = 4096,
+) -> jnp.ndarray:
+    """BUM with the paper's *sliding window*: merge duplicates only within
+    fixed-size windows of the update stream, then scatter each window's
+    merged updates.
+
+    This is the faithful adaptation for data-parallel settings
+    (EXPERIMENTS.md §Perf iteration 3): a GLOBAL sort must materialize and
+    gather every (update, d_model) vector across shards; windows bound the
+    live set to (window x F) regardless of stream length, exactly like the
+    paper's 16-deep CAM bounds SRAM — here the window is a shard's local
+    batch.  Write count lands between naive (no merge) and global merge.
+    """
+    t, f = table.shape
+    m = idx.shape[0]
+    pad = (-m) % window
+    if pad:
+        idx = jnp.concatenate([idx, jnp.full((pad,), t, jnp.int32)])
+        vals = jnp.concatenate([vals, jnp.zeros((pad, f), vals.dtype)])
+    n_win = idx.shape[0] // window
+    idx_w = idx.reshape(n_win, window)
+    vals_w = vals.reshape(n_win, window, f).astype(jnp.float32)
+
+    def merge_window(tbl, inp):
+        wi, wv = inp
+        order = jnp.argsort(wi)
+        wi, wv = wi[order], wv[order]
+        is_start = jnp.concatenate([jnp.ones((1,), bool), wi[1:] != wi[:-1]])
+        seg = jnp.cumsum(is_start) - 1
+        summed = jax.ops.segment_sum(wv, seg, num_segments=window)
+        seg_idx = jax.ops.segment_min(wi, seg, num_segments=window)
+        return tbl.at[seg_idx].add(summed.astype(tbl.dtype), mode="drop"), None
+
+    out, _ = jax.lax.scan(merge_window, table, (idx_w, vals_w))
+    return out

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for embedding-grid gradient updates (naive scatter-add).
+
+This is what the paper's BUM unit replaces: during back-propagation every
+queried point writes 8 corner updates into the hash table, and many of those
+writes hit the *same* table entry (paper Fig. 10: ~200 unique addresses per
+1000 consecutive accesses).  The oracle applies them as a plain duplicate
+scatter-add — on TPU, XLA serializes colliding scatter updates, which is the
+analogue of the SRAM write pressure the BUM removes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def scatter_add(table: jnp.ndarray, idx: jnp.ndarray, vals: jnp.ndarray) -> jnp.ndarray:
+    """table (T,F) += vals (M,F) at rows idx (M,), duplicates accumulated."""
+    return table.at[idx].add(vals.astype(table.dtype))
+
+
+def unique_fraction(idx: jnp.ndarray, window: int = 1000) -> jnp.ndarray:
+    """Mean fraction of unique addresses per sliding window (paper Fig. 10 stat)."""
+    m = idx.shape[0]
+    n_win = max(m // window, 1)
+    idx = idx[: n_win * window].reshape(n_win, window)
+    s = jnp.sort(idx, axis=1)
+    uniq = jnp.concatenate(
+        [jnp.ones((n_win, 1), bool), s[:, 1:] != s[:, :-1]], axis=1
+    ).sum(axis=1)
+    return jnp.mean(uniq / window)

@@ -1,0 +1,126 @@
+"""Pure-jnp oracle for multiresolution hash-grid encoding (Instant-NGP Step 3-1).
+
+This is the bottleneck step Instant-3D accelerates: for every queried 3D point,
+fetch the embeddings of its 8 surrounding grid vertices from a 1D hash table
+(paper Eq. 3) and trilinearly interpolate them.
+
+Conventions
+-----------
+* points are in the unit cube [0, 1)^3, float32, shape (N, 3).
+* tables has shape (L, T, F): L resolution levels, T hash-table entries per
+  level, F features per entry.  T is a power of two.
+* per-level resolution R_l: the grid at level l has (R_l + 1)^3 vertices.  If
+  (R_l + 1)^3 <= T the level is indexed *densely* (no hashing, no collisions),
+  otherwise via the spatial hash of Eq. 3:
+
+      h(x, y, z) = (x * pi1  XOR  y * pi2  XOR  z * pi3)  mod  T
+      pi1 = 1, pi2 = 2654435761, pi3 = 805459861
+
+All level geometry (resolutions, dense-vs-hash flags) is static numpy — only
+points and tables are traced.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+PI1 = np.uint32(1)
+PI2 = np.uint32(2654435761)
+PI3 = np.uint32(805459861)
+
+# The 8 corner offsets of a unit cube, ordered 000, 001, ..., 111 (paper Fig. 3;
+# bit k of the corner id selects dimension k's +1 offset: id = z<<2 | y<<1 | x).
+CORNERS = np.array(
+    [[x, y, z] for z in (0, 1) for y in (0, 1) for x in (0, 1)], dtype=np.int32
+)  # (8, 3)
+
+
+def level_resolutions(n_levels: int, base_resolution: int, max_resolution: int) -> np.ndarray:
+    """Per-level grid resolutions N_l = floor(N_min * b^l) (Instant-NGP growth rule)."""
+    if n_levels == 1:
+        return np.array([base_resolution], dtype=np.int32)
+    b = np.exp((np.log(max_resolution) - np.log(base_resolution)) / (n_levels - 1))
+    return np.floor(base_resolution * b ** np.arange(n_levels) + 1e-6).astype(np.int32)
+
+
+def level_is_dense(resolutions: np.ndarray, table_size: int) -> np.ndarray:
+    """True where the level's full grid fits in the table (no hashing needed)."""
+    r = np.asarray(resolutions, dtype=np.int64)
+    return (r + 1) ** 3 <= np.int64(table_size)
+
+
+def spatial_hash(ix: jnp.ndarray, iy: jnp.ndarray, iz: jnp.ndarray, table_size: int) -> jnp.ndarray:
+    """Eq. 3 of the paper. int32 coords -> int32 table index in [0, T)."""
+    h = (
+        ix.astype(jnp.uint32) * PI1
+        ^ iy.astype(jnp.uint32) * PI2
+        ^ iz.astype(jnp.uint32) * PI3
+    )
+    return (h & jnp.uint32(table_size - 1)).astype(jnp.int32)
+
+
+def dense_index(ix, iy, iz, resolution) -> jnp.ndarray:
+    """Collision-free index for levels whose full grid fits in the table."""
+    stride = resolution + 1
+    return (ix + iy * stride + iz * stride * stride).astype(jnp.int32)
+
+
+def corner_index(coords: jnp.ndarray, resolution: int, table_size: int, dense: bool) -> jnp.ndarray:
+    """Table index for integer grid coords (..., 3) at one level (static geometry)."""
+    ix, iy, iz = coords[..., 0], coords[..., 1], coords[..., 2]
+    if dense:
+        return dense_index(ix, iy, iz, resolution)
+    return spatial_hash(ix, iy, iz, table_size)
+
+
+def _level_corners(points: jnp.ndarray, resolution: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Corner integer coords and trilinear weights for one level.
+
+    Returns (corners (N, 8, 3) int32, weights (N, 8) f32).
+    """
+    scaled = points.astype(jnp.float32) * resolution
+    base = jnp.floor(scaled)
+    frac = scaled - base  # (N, 3) in [0,1)
+    corners = base.astype(jnp.int32)[:, None, :] + CORNERS[None, :, :]  # (N, 8, 3)
+    # weight per corner: prod_d (frac_d if offset_d else 1 - frac_d)
+    offs = jnp.asarray(CORNERS, dtype=jnp.float32)  # (8, 3)
+    w = jnp.where(offs[None, :, :] > 0, frac[:, None, :], 1.0 - frac[:, None, :])
+    return corners, jnp.prod(w, axis=-1)
+
+
+def encode_level(points: jnp.ndarray, table: jnp.ndarray, resolution: int) -> jnp.ndarray:
+    """Interpolated features for one level. points (N,3), table (T,F) -> (N,F)."""
+    t = table.shape[0]
+    dense = bool(level_is_dense(np.array([resolution]), t)[0])
+    corners, weights = _level_corners(points, resolution)
+    idx = corner_index(corners, resolution, t, dense)  # (N, 8)
+    feats = table[idx]  # (N, 8, F) gather
+    return jnp.sum(weights[..., None] * feats.astype(jnp.float32), axis=1)
+
+
+def hash_encode(points: jnp.ndarray, tables: jnp.ndarray, resolutions) -> jnp.ndarray:
+    """Full multiresolution encoding. points (N,3), tables (L,T,F) -> (N, L*F)."""
+    outs = [
+        encode_level(points, tables[l], int(resolutions[l]))
+        for l in range(tables.shape[0])
+    ]
+    return jnp.concatenate(outs, axis=-1)
+
+
+def hash_encode_vjp_tables(points, tables, resolutions, grad_out):
+    """Oracle gradient w.r.t. tables via naive duplicate scatter-add.
+
+    grad_out: (N, L*F).  Returns (L, T, F) float32.
+    """
+    n, _ = points.shape
+    num_l, t, f = tables.shape
+    g = grad_out.reshape(n, num_l, f)
+    out = jnp.zeros((num_l, t, f), jnp.float32)
+    for l in range(num_l):
+        res = int(resolutions[l])
+        dense = bool(level_is_dense(np.array([res]), t)[0])
+        corners, weights = _level_corners(points, res)
+        idx = corner_index(corners, res, t, dense)
+        upd = weights[..., None] * g[:, l, None, :]  # (N, 8, F)
+        out = out.at[l, idx.reshape(-1)].add(upd.reshape(-1, f))
+    return out

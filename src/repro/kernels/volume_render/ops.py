@@ -1,0 +1,25 @@
+"""Jitted wrapper for volume rendering with backend routing + ray padding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref
+
+
+def composite(sigma, rgb, deltas, ts, *, backend: str = "ref", block_rays: int = _kernel.DEFAULT_BLOCK_RAYS):
+    """Render rays. 'ref' returns RenderOut (incl. weights, autodiff path);
+    'pallas' returns RenderOut with weights=None (fused inference path)."""
+    if backend == "pallas":
+        r = sigma.shape[0]
+        pad = (-r) % block_rays
+        if pad:
+            z = lambda x: jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+            sigma, rgb, deltas, ts = z(sigma), z(rgb), z(deltas), z(ts)
+        color, depth, opac = _kernel.composite_pallas(
+            sigma, rgb, deltas, ts, block_rays=block_rays,
+            interpret=jax.default_backend() != "tpu",
+        )
+        return ref.RenderOut(color[:r], depth[:r], opac[:r], None)
+    return ref.composite(sigma, rgb, deltas, ts)

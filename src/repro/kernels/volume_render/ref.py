@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for volume rendering composition (paper Eq. 1, Step 4).
+
+Given per-sample densities sigma_k, colors c_k and segment lengths delta_k
+along each ray:
+
+    alpha_k = 1 - exp(-sigma_k * delta_k)
+    T_k     = exp(-sum_{j<k} sigma_j * delta_j)      (transmittance)
+    w_k     = T_k * alpha_k
+    C(r)    = sum_k w_k c_k
+
+Also returns depth (= sum w_k t_k) and opacity (= sum w_k), used for the
+paper's Fig. 5 depth-PSNR instrumentation.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class RenderOut(NamedTuple):
+    color: jnp.ndarray    # (R, 3)
+    depth: jnp.ndarray    # (R,)
+    opacity: jnp.ndarray  # (R,)
+    weights: jnp.ndarray  # (R, S)
+
+
+def composite(sigma: jnp.ndarray, rgb: jnp.ndarray, deltas: jnp.ndarray, ts: jnp.ndarray) -> RenderOut:
+    """sigma (R,S), rgb (R,S,3), deltas (R,S), ts (R,S) -> RenderOut."""
+    tau = sigma.astype(jnp.float32) * deltas.astype(jnp.float32)  # (R, S)
+    cum = jnp.cumsum(tau, axis=-1)
+    transmittance = jnp.exp(-(cum - tau))  # exclusive cumsum: T_k
+    alpha = 1.0 - jnp.exp(-tau)
+    weights = transmittance * alpha  # (R, S)
+    color = jnp.sum(weights[..., None] * rgb.astype(jnp.float32), axis=-2)
+    depth = jnp.sum(weights * ts.astype(jnp.float32), axis=-1)
+    opacity = jnp.sum(weights, axis=-1)
+    return RenderOut(color, depth, opacity, weights)

@@ -1,0 +1,226 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct inputs — no allocation — and record memory/cost/collective
+analysis for the roofline table.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k [--multi-pod]
+    python -m repro.launch.dryrun --all [--out results/dryrun]
+
+The XLA_FLAGS line above MUST run before any other import (jax locks device
+count on first init).  `--all` runs each cell in a subprocess so one cell's
+compile memory cannot poison the next.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import subprocess  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+
+def probe_variants(cfg):
+    """Small unrolled config variants whose compiled costs solve for
+    per-layer-body costs (XLA counts a lax.scan while-body once, so the
+    full-depth compile's cost_analysis undercounts by ~n_layers; probes are
+    python-unrolled and exact).  Returns (variants, coeff_rows, full_counts):
+    cost(variant_i) = coeff_rows[i] · body_costs;  true = full_counts · body_costs.
+    """
+    import dataclasses
+    r = dataclasses.replace
+    if cfg.enc_dec:
+        a = r(cfg, n_layers=1, n_encoder_layers=1, unroll_layers=True)
+        b = r(cfg, n_layers=1, n_encoder_layers=2, unroll_layers=True)
+        c = r(cfg, n_layers=2, n_encoder_layers=1, unroll_layers=True)
+        return [a, b, c], [[1, 1, 1], [1, 2, 1], [1, 1, 2]], \
+            [1, cfg.n_encoder_layers, cfg.n_layers]
+    if cfg.hybrid_attn_every:
+        ev = cfg.hybrid_attn_every
+        a = r(cfg, n_layers=1, hybrid_attn_every=0, unroll_layers=True)
+        b = r(cfg, n_layers=2, hybrid_attn_every=0, unroll_layers=True)
+        c = r(cfg, n_layers=ev, hybrid_attn_every=ev, unroll_layers=True)
+        return [a, b, c], [[1, 1, 0], [1, 2, 0], [1, ev, 1]], \
+            [1, cfg.n_layers, cfg.n_layers // ev]
+    if cfg.moe is not None and cfg.moe.n_dense_layers:
+        nd = cfg.moe.n_dense_layers
+        a = r(cfg, n_layers=2, moe=r(cfg.moe, n_dense_layers=1), unroll_layers=True)
+        b = r(cfg, n_layers=3, moe=r(cfg.moe, n_dense_layers=1), unroll_layers=True)
+        c = r(cfg, n_layers=3, moe=r(cfg.moe, n_dense_layers=2), unroll_layers=True)
+        return [a, b, c], [[1, 1, 1], [1, 1, 2], [1, 2, 1]], \
+            [1, nd, cfg.n_layers - nd]
+    a = r(cfg, n_layers=1, unroll_layers=True)
+    b = r(cfg, n_layers=2, unroll_layers=True)
+    return [a, b], [[1, 1], [1, 2]], [1, cfg.n_layers]
+
+
+def _compile_cell(cfg, shape_name, mesh, variant="optimized"):
+    """lower+compile one config; returns (memory_analysis, metrics dict)."""
+    import jax
+    from .steps import build_step_cfg
+    from .roofline import collective_stats
+
+    with jax.set_mesh(mesh):
+        (fn, abstract_args), cfg, shape = build_step_cfg(cfg, shape_name, mesh, variant)
+        lowered = fn.lower(*abstract_args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+    coll = collective_stats(hlo, default_group=mesh.shape.get("model", 1))
+    metrics = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "wire": float(coll["wire_bytes_per_device"]),
+    }
+    return mem, metrics, coll, shape
+
+
+def corrected_metrics(cfg, shape_name, mesh, variant="optimized"):
+    """Probe-and-extrapolate exact per-step flops/bytes/wire per device."""
+    import numpy as np
+
+    variants, rows, full = probe_variants(cfg)
+    ys = []
+    for v in variants:
+        _, m, _, _ = _compile_cell(v, shape_name, mesh, variant)
+        ys.append([m["flops"], m["bytes"], m["wire"]])
+    a = np.asarray(rows, dtype=np.float64)
+    y = np.asarray(ys, dtype=np.float64)
+    body, *_ = np.linalg.lstsq(a, y, rcond=None)
+    est = np.asarray(full, dtype=np.float64) @ body
+    est = np.maximum(est, 0.0)
+    return {"flops": float(est[0]), "bytes": float(est[1]), "wire": float(est[2])}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, probes: bool = True,
+             variant: str = "optimized") -> dict:
+    from .mesh import make_production_mesh
+    from .roofline import roofline, model_flops_for
+    from ..configs import get_config
+    from ..configs.shapes import applicable
+
+    cfg = get_config(arch)
+    ok, why = applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_devices = mesh.devices.size
+    t0 = time.time()
+    mem, raw, coll, shape = _compile_cell(cfg, shape_name, mesh, variant)
+    t_compile = time.time() - t0
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "policy": variant,
+        "status": "ok",
+        "n_devices": int(n_devices),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes_per_device": int(mem.argument_size_in_bytes),
+            "output_bytes_per_device": int(mem.output_size_in_bytes),
+            "temp_bytes_per_device": int(mem.temp_size_in_bytes),
+            "alias_bytes_per_device": int(mem.alias_size_in_bytes),
+            "peak_estimate_gib": round(
+                (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                 + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 2**30, 3),
+        },
+        "collectives": coll["ops"],
+        "raw_scan_metrics": raw,  # while-body counted once; see probes
+    }
+
+    mf = model_flops_for(cfg, shape)
+    # analytic HBM-traffic lower bound: every input byte read once, every
+    # output byte written once (donated buffers alias, counted once)
+    min_bytes = float(mem.argument_size_in_bytes + mem.output_size_in_bytes
+                      - mem.alias_size_in_bytes)
+    if probes and not multi_pod:
+        t1 = time.time()
+        est = corrected_metrics(cfg, shape_name, mesh, variant)
+        result["probe_s"] = round(time.time() - t1, 1)
+        cost = {"flops": est["flops"], "bytes accessed": est["bytes"]}
+        coll_est = {"wire_bytes_per_device": est["wire"]}
+        result["roofline"] = roofline(cost, coll_est, n_devices, mf, min_bytes).to_dict()
+    else:
+        cost = {"flops": raw["flops"], "bytes accessed": raw["bytes"]}
+        coll_est = {"wire_bytes_per_device": raw["wire"]}
+        result["roofline_raw"] = roofline(cost, coll_est, n_devices, mf, min_bytes).to_dict()
+    return result
+
+
+def all_cells():
+    from ..configs import list_archs
+    from ..configs.shapes import SHAPES
+    # smallest archs first so results accumulate fast
+    order = ["qwen1_5-0_5b", "qwen2-vl-2b", "whisper-medium", "chatglm3-6b",
+             "qwen3-8b", "yi-9b", "falcon-mamba-7b", "zamba2-7b",
+             "deepseek-v2-lite-16b", "deepseek-v3-671b"]
+    for multi_pod in (False, True):
+        for arch in order:
+            for shape in SHAPES:
+                yield arch, shape, multi_pod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--policy", default="optimized", choices=["baseline", "optimized"])
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        for arch, shape, multi_pod in all_cells():
+            tag = f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}"
+            path = out_dir / f"{tag}.json"
+            if path.exists() and not args.force:
+                print(f"[skip-cached] {tag}", flush=True)
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--out", str(out_dir),
+                   "--policy", args.policy]
+            if multi_pod:
+                cmd.append("--multi-pod")
+            print(f"[run] {tag}", flush=True)
+            try:
+                r = subprocess.run(cmd, timeout=args.timeout, capture_output=True, text=True)
+                if r.returncode != 0:
+                    err = (r.stderr or "")[-2000:]
+                    path.write_text(json.dumps({
+                        "arch": arch, "shape": shape, "multi_pod": multi_pod,
+                        "status": "error", "stderr_tail": err}, indent=2))
+                    print(f"[FAIL] {tag}: {err.splitlines()[-1] if err else '?'}", flush=True)
+            except subprocess.TimeoutExpired:
+                path.write_text(json.dumps({
+                    "arch": arch, "shape": shape, "multi_pod": multi_pod,
+                    "status": "timeout"}, indent=2))
+                print(f"[TIMEOUT] {tag}", flush=True)
+        return
+
+    result = run_cell(args.arch, args.shape, args.multi_pod, variant=args.policy)
+    tag = f"{args.arch}__{args.shape}__{'pod2' if args.multi_pod else 'pod1'}"
+    path = out_dir / f"{tag}.json"
+    path.write_text(json.dumps(result, indent=2))
+    print(json.dumps(result, indent=2))
+    if result["status"] == "ok":
+        m = result["memory"]
+        r = result.get("roofline") or result.get("roofline_raw")
+        print(f"\n[{tag}] peak/device={m['peak_estimate_gib']} GiB  "
+              f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+              f"collective={r['collective_s']:.4f}s -> {r['bound']}-bound  "
+              f"useful={r['useful_ratio']:.2%}")
+
+
+if __name__ == "__main__":
+    main()

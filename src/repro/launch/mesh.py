@@ -1,0 +1,26 @@
+"""Production mesh construction (function, not constant — importing this
+module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod ('data','model'); 2 pods -> (2,16,16) with a
+    leading 'pod' axis (DP across pods, DCN hop = gradient all-reduce)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(model: int = 1, data: int = 1):
+    """Small mesh over the locally available devices (tests / examples)."""
+    n = jax.device_count()
+    if model * data > n:
+        model, data = 1, 1
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

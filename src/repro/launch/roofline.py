@@ -1,0 +1,173 @@
+"""Roofline model: three terms (compute / memory / collective) per compiled cell.
+
+TPU v5e constants (assignment-specified): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.  `cost_analysis()` on an SPMD executable reports
+*per-device* FLOPs/bytes, so terms divide by per-chip peaks directly.
+
+Collective bytes are not in cost_analysis: we sweep the compiled HLO for
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(including async -start forms; -done forms are skipped to avoid double
+counting), sum operand bytes, parse replica-group sizes, and convert to
+wire bytes per device with ring factors:
+
+    all-reduce        2·S·(n-1)/n
+    all-gather        S_shard·(n-1)        (operand is the local shard)
+    reduce-scatter    S·(n-1)/n
+    all-to-all        S·(n-1)/n
+    collective-permute S
+
+collective_term = wire_bytes / ICI_BW — a single-link model (a 2D-torus
+multi-link schedule would divide by the number of usable links; we report
+the conservative number and note it in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # bytes/s / chip
+ICI_BW = 50e9           # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<result>\([^)]*\)|[a-z0-9_]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<kind>all-reduce-start|all-gather-start|collective-permute-start|"
+    r"all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"\((?P<operands>[^)]*)\)(?P<tail>.*)$"
+)
+_TYPE_RE = re.compile(r"(pred|f8e4m3fn|f8e5m2|bf16|f16|f32|f64|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64|c64)\[([0-9,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(tail: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(tail)
+    if m:
+        return int(m.group(2))  # [G, n] -> n ranks per group
+    m = _GROUPS_LIST_RE.search(tail)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default
+
+
+# wire bytes per device as a function of the *result* bytes S_res:
+#   all-reduce        result == operand       -> 2·S·(n-1)/n
+#   all-gather        result is the full buf  -> S·(n-1)/n
+#   reduce-scatter    result is the shard     -> S·(n-1)
+#   all-to-all        result == operand       -> S·(n-1)/n
+#   collective-permute                        -> S
+_RING_FACTOR = {
+    "all-reduce": lambda s, n: 2.0 * s * (n - 1) / max(n, 1),
+    "all-gather": lambda s, n: 1.0 * s * (n - 1) / max(n, 1),
+    "reduce-scatter": lambda s, n: 1.0 * s * (n - 1),
+    "all-to-all": lambda s, n: 1.0 * s * (n - 1) / max(n, 1),
+    "collective-permute": lambda s, n: 1.0 * s,
+}
+
+
+def collective_stats(hlo_text: str, default_group: int) -> dict:
+    """Sweep compiled HLO text; returns per-op-kind result/wire byte sums.
+
+    Optimized HLO prints operands as bare %names, so sizes come from the
+    instruction's *result* type.  Async -start forms are counted; -done
+    forms don't match the result pattern (they return from a tuple) and
+    -update forms are excluded by the regex.  For tuple results (-start
+    ops), the last tuple element is the output buffer.
+    """
+    ops: dict[str, dict] = {}
+    wire_total = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group("kind").replace("-start", "")
+        result = m.group("result")
+        tail = m.group("tail")
+        types = _TYPE_RE.findall(result)
+        if not types:
+            continue
+        rbytes = _shape_bytes(*types[-1])
+        n = _group_size(tail, default_group)
+        wire = _RING_FACTOR[kind](rbytes, n)
+        rec = ops.setdefault(kind, {"count": 0, "result_bytes": 0, "wire_bytes": 0.0})
+        rec["count"] += 1
+        rec["result_bytes"] += rbytes
+        rec["wire_bytes"] += wire
+        wire_total += wire
+    return {"ops": ops, "wire_bytes_per_device": wire_total}
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    hlo_bytes_per_device: float      # XLA 'bytes accessed' — pre-fusion UPPER bound
+    min_bytes_per_device: float      # arguments+outputs traffic — LOWER bound
+    wire_bytes_per_device: float
+    compute_s: float
+    memory_upper_s: float
+    memory_s: float                  # from the lower bound; used for the verdict
+    collective_s: float
+    bound: str
+    model_flops: float
+    useful_ratio: float
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def roofline(cost: dict, coll: dict, n_devices: int, model_flops: float,
+             min_bytes: float = 0.0) -> Roofline:
+    """Three-term roofline.  The memory term uses the analytic lower bound
+    (inputs read once + outputs written once): XLA:CPU 'bytes accessed' counts
+    every instruction's operands pre-TPU-fusion and overstates HBM traffic by
+    ~10x; both numbers are reported (EXPERIMENTS.md §Roofline caveat)."""
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    wire = float(coll["wire_bytes_per_device"])
+    terms = {
+        "compute": flops / PEAK_FLOPS,
+        "memory": min_bytes / HBM_BW,
+        "collective": wire / ICI_BW,
+    }
+    bound = max(terms, key=terms.get)
+    useful = model_flops / max(flops * n_devices, 1.0)
+    return Roofline(
+        flops_per_device=flops,
+        hlo_bytes_per_device=byts,
+        min_bytes_per_device=min_bytes,
+        wire_bytes_per_device=wire,
+        compute_s=terms["compute"],
+        memory_upper_s=byts / HBM_BW,
+        memory_s=terms["memory"],
+        collective_s=terms["collective"],
+        bound=bound,
+        model_flops=model_flops,
+        useful_ratio=useful,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6·N_active·D for training, 2·N_active·D for inference."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n_active * tokens

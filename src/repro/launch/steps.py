@@ -1,0 +1,159 @@
+"""Step-function builders shared by dryrun / train / serve.
+
+Each builder returns (fn, abstract_args, in_shardings, donate) ready for
+jax.jit().lower(*abstract_args) — the dry-run path — or for real execution
+with concrete arrays of the same shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import get_config
+from ..configs.shapes import SHAPES, Shape, input_specs
+from ..models.config import ModelConfig
+from ..models.lm import LM
+from ..optim import AdamW, AdamWState, schedule
+from ..parallel import sharding as shd
+
+# archs big enough that params+opt must shard over 'data' too (ZeRO/FSDP)
+FSDP_ARCHS = {
+    "qwen3-8b", "yi-9b", "chatglm3-6b", "deepseek-v2-lite-16b",
+    "deepseek-v3-671b", "zamba2-7b", "falcon-mamba-7b",
+}
+
+
+def policy_for(cfg: ModelConfig, train: bool, variant: str = "optimized") -> shd.ShardingPolicy:
+    """Sharding policy per (arch, step kind).
+
+    baseline  — paper-faithful first cut: Megatron TP over 'model' everywhere,
+                FSDP over 'data' for >=7B training.
+    optimized — §Perf hillclimbed: train/prefill use the FSDP-pure (ZeRO-3)
+                policy (activation all-reduces -> per-layer param gathers,
+                10-20x less wire at batch 256x4k); decode keeps TP (params +
+                KV cache sharded; per-step compute tiny).
+    """
+    if variant == "baseline" or not train:
+        return shd.ShardingPolicy(tp=True, fsdp=train and cfg.name in FSDP_ARCHS)
+    return shd.FSDP_PURE
+
+
+def make_optimizer(cfg: ModelConfig) -> AdamW:
+    return AdamW(
+        lr=schedule.warmup_cosine(3e-4, 2000, 100_000),
+        b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1, clip_norm=1.0,
+    )
+
+
+def opt_state_specs(param_specs_tree):
+    return AdamWState(step=P(), m=param_specs_tree, v=param_specs_tree)
+
+
+
+def _act_spec(shape: Shape, mesh, policy):
+    """(B,S,D) residual-stream PartitionSpec under this policy's batch split."""
+    dpa = shd.dp(mesh, policy)
+    ax_b, ax_s = shd._split_batch_seq(shape.global_batch, shape.seq, dpa, mesh)
+    return P(ax_b, ax_s, None)
+
+
+def build_train_step(cfg: ModelConfig, mesh, shape: Shape, variant: str = "optimized"):
+    policy = policy_for(cfg, train=True, variant=variant)
+    model = LM(cfg, mesh=mesh, tp_logits=policy.tp,
+               act_spec=None if policy.tp else _act_spec(shape, mesh, policy))
+    opt = make_optimizer(cfg)
+
+    abstract_params = model.init_abstract()
+    abstract_opt = jax.eval_shape(opt.init, abstract_params)
+    batch = input_specs(cfg, shape)
+
+    pspecs = shd.param_specs(cfg, abstract_params, mesh, policy)
+    ospecs = opt_state_specs(pspecs)
+    bspecs = shd.batch_specs(cfg, batch, mesh, policy)
+
+    def train_step(params, opt_state, b):
+        loss, grads = jax.value_and_grad(model.loss)(params, b)
+        params, opt_state = opt.apply(params, grads, opt_state)
+        return params, opt_state, loss
+
+    named = lambda t: shd.to_named(t, mesh)
+    fn = jax.jit(
+        train_step,
+        in_shardings=(named(pspecs), named(ospecs), named(bspecs)),
+        out_shardings=(named(pspecs), named(ospecs), NamedSharding(mesh, P())),
+        donate_argnums=(0, 1),
+    )
+    return fn, (abstract_params, abstract_opt, batch)
+
+
+def build_prefill_step(cfg: ModelConfig, mesh, shape: Shape, variant: str = "optimized"):
+    # prefill is token-heavy like training: use the train-side policy
+    policy = policy_for(cfg, train=True, variant=variant)
+    model = LM(cfg, mesh=mesh, tp_logits=policy.tp,
+               act_spec=None if policy.tp else _act_spec(shape, mesh, policy))
+    abstract_params = model.init_abstract()
+    batch = input_specs(cfg, shape)
+    pspecs = shd.param_specs(cfg, abstract_params, mesh, policy)
+    bspecs = shd.batch_specs(cfg, batch, mesh, policy)
+
+    def prefill_step(params, b):
+        logits, caches, _ = model.prefill(
+            params,
+            tokens=b.get("tokens"),
+            embeds=b.get("embeds"),
+            positions=b.get("positions"),
+            encoder_embeds=b.get("encoder_embeds"),
+        )
+        return logits, caches
+
+    named = lambda t: shd.to_named(t, mesh)
+    fn = jax.jit(prefill_step, in_shardings=(named(pspecs), named(bspecs)))
+    return fn, (abstract_params, batch)
+
+
+def build_decode_step(cfg: ModelConfig, mesh, shape: Shape, variant: str = "optimized"):
+    policy = policy_for(cfg, train=False, variant=variant)
+    model = LM(cfg, mesh=mesh, tp_logits=policy.tp)
+    abstract_params = model.init_abstract()
+    batch = input_specs(cfg, shape)
+    pspecs = shd.param_specs(cfg, abstract_params, mesh, policy)
+    bspecs = shd.batch_specs(cfg, batch, mesh, policy)
+
+    def decode_step(params, b):
+        logits, caches = model.decode_step(
+            params, b["caches"], b["tokens"], b["pos"],
+            encoder_out=b.get("encoder_out"),
+        )
+        return logits, caches
+
+    named = lambda t: shd.to_named(t, mesh)
+    cache_out = named(bspecs)["caches"]
+    dpa = shd.dp(mesh, policy)
+    n_dp = int(np.prod([mesh.shape[a] for a in dpa])) if dpa else 1
+    batch_ax = dpa if shape.global_batch % max(n_dp, 1) == 0 else None
+    vocab_ax = policy.model_axis if cfg.vocab % mesh.shape.get(policy.model_axis, 1) == 0 else None
+    fn = jax.jit(
+        decode_step,
+        in_shardings=(named(pspecs), named(bspecs)),
+        out_shardings=(NamedSharding(mesh, P(batch_ax, vocab_ax)), cache_out),
+        donate_argnums=(1,),
+    )
+    return fn, (abstract_params, batch)
+
+
+def build_step_cfg(cfg: ModelConfig, shape_name: str, mesh, variant: str = "optimized"):
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return build_train_step(cfg, mesh, shape, variant), cfg, shape
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, mesh, shape, variant), cfg, shape
+    return build_decode_step(cfg, mesh, shape, variant), cfg, shape
+
+
+def build_step(arch: str, shape_name: str, mesh, variant: str = "optimized"):
+    return build_step_cfg(get_config(arch), shape_name, mesh, variant)

@@ -1,0 +1,95 @@
+"""Production LM training entry point.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+        --shape train_4k --smoke --steps 50 --ckpt-dir /tmp/run1 --auto-resume
+
+On a real fleet this process runs per host with --coordinator/--process-id
+(jax.distributed); in this container it runs single-process on the host mesh.
+--smoke swaps in the reduced config so the loop actually executes on CPU;
+without it the full config is used (dry-run scale — lower/compile only unless
+you are on a pod).
+
+Fault tolerance: atomic checkpoints every --ckpt-every steps, SIGTERM-safe,
+--auto-resume restores params/opt/data-cursor, straggler watchdog logs.
+Cross-pod gradient compression: --compress-grads (int8 + error feedback).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from ..configs import get_config, get_smoke_config, list_archs
+from ..data import SyntheticLMStream, LMStreamConfig
+from ..models.lm import LM
+from ..optim import AdamW, schedule
+from ..parallel import collectives
+from ..runtime import TrainDriver, DriverConfig, resume_or_init
+from .mesh import make_host_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--auto-resume", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true",
+                    help="int8 error-feedback gradient sync over the 'pod' axis")
+    ap.add_argument("--coordinator", default=None, help="jax.distributed coordinator")
+    ap.add_argument("--num-processes", type=int, default=1)
+    ap.add_argument("--process-id", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.coordinator:
+        jax.distributed.initialize(args.coordinator, args.num_processes, args.process_id)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_host_mesh()
+    model = LM(cfg, mesh=mesh)
+    opt = AdamW(lr=schedule.warmup_cosine(args.lr, 10, args.steps),
+                clip_norm=1.0, weight_decay=0.01)
+    stream = SyntheticLMStream(LMStreamConfig(cfg.vocab, args.seq, args.batch))
+
+    params0 = model.init(jax.random.PRNGKey(0))
+    err0 = collectives.init_error_state(params0) if args.compress_grads else None
+
+    @jax.jit
+    def train_step(params, opt_state, err, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        if args.compress_grads and "pod" in mesh.shape:
+            grads, err = collectives.compressed_grad_sync(grads, err, mesh, "pod")
+        params, opt_state = opt.apply(params, grads, opt_state)
+        return params, opt_state, err, loss
+
+    def step_fn(state, batch):
+        params, opt_state, err = state
+        batch = {"tokens": jnp.asarray(batch["tokens"])}
+        params, opt_state, err, loss = train_step(params, opt_state, err, batch)
+        return (params, opt_state, err), {"loss": float(loss)}
+
+    ckpt = CheckpointManager(args.ckpt_dir, keep_last=3)
+    template = (params0, opt.init(params0), err0)
+    if args.auto_resume:
+        state, start = resume_or_init(ckpt, template, lambda: template)
+    else:
+        state, start = template, 0
+
+    drv = TrainDriver(DriverConfig(
+        total_steps=args.steps, checkpoint_every=args.ckpt_every, log_every=10,
+        metrics_path=f"{args.ckpt_dir}/metrics.jsonl"), ckpt)
+    state, summary = drv.run(state, step_fn, stream.iterator(start_step=start),
+                             start_step=start)
+    print("summary:", summary)
+
+
+if __name__ == "__main__":
+    main()

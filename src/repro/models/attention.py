@@ -1,0 +1,323 @@
+"""Attention: GQA/MHA (bias, qk_norm, RoPE variants) and DeepSeek MLA.
+
+Shapes: activations (B, S, D); projection weights keep the head axis explicit
+— wq (D, H, hd) — so the TP partition rules in repro.parallel can shard heads
+on the 'model' axis by annotating that axis directly.
+
+Decode: `kv_cache` is a dict {'k': (B, S_max, K, hd), 'v': ...} (MLA caches
+the compressed c_kv + shared k_rope instead — its headline memory win).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ModelConfig, MLAConfig
+
+
+def _apply_positional(cfg: ModelConfig, x, positions):
+    if cfg.rope == "standard":
+        return layers.apply_rope(x, positions, cfg.rope_theta)
+    if cfg.rope == "rope2d":
+        return layers.apply_rope_2d(x, positions, cfg.rope_theta)
+    if cfg.rope == "mrope":
+        return layers.apply_mrope(x, positions, cfg.mrope_sections, cfg.rope_theta)
+    return x
+
+
+def init_attention(rng, cfg: ModelConfig, dtype) -> dict:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(rng, 6)
+    p = {
+        "wq": layers.normal_init(ks[0], (d, h, hd), dtype=dtype),
+        "wk": layers.normal_init(ks[1], (d, k, hd), dtype=dtype),
+        "wv": layers.normal_init(ks[2], (d, k, hd), dtype=dtype),
+        "wo": layers.normal_init(ks[3], (h, hd, d), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((k, hd), dtype)
+        p["bv"] = jnp.zeros((k, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _qkv(params, cfg: ModelConfig, x, positions):
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    k = jnp.einsum("bsd,dke->bske", x, params["wk"])
+    v = jnp.einsum("bsd,dke->bske", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, params["q_norm"])
+        k = layers.rms_norm(k, params["k_norm"])
+    q = _apply_positional(cfg, q, positions)
+    k = _apply_positional(cfg, k, positions)
+    return q, k, v
+
+
+# above this many score elements per head-group, use the chunked online-softmax
+# path (flash-attention pattern): never materializes (Sq, Sk) scores.
+# 2048x4096 pulls the train_4k shapes in — dense (S,S) f32 scores were the
+# peak-memory driver at 4k (§Perf iteration 3).
+_CHUNKED_THRESHOLD = 2048 * 4096
+_Q_CHUNK = 1024
+_K_CHUNK = 1024
+
+
+def _sdpa_dense(q, k, v, causal: bool, q_offset=0):
+    b, sq, h, hd = q.shape
+    sk, kh, hd_v = v.shape[1], v.shape[2], v.shape[3]
+    rep = h // kh
+    q = q.reshape(b, sq, kh, rep, hd)
+    scores = jnp.einsum("bqkre,bske->bkrqs", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if causal:
+        qi = jnp.arange(sq)[:, None] + q_offset
+        ki = jnp.arange(sk)[None, :]
+        scores = jnp.where(ki <= qi, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrqs,bske->bqkre", probs, v)
+    return out.reshape(b, sq, h, hd_v)
+
+
+def _sdpa_chunked(q, k, v, causal: bool, q_offset=0):
+    """Memory-efficient attention (Rabe-Staats / flash pattern in pure JAX):
+    outer scan over query chunks, inner scan over key chunks with running
+    (max, denom, acc) online softmax.  Peak memory per step is one
+    (q_chunk, k_chunk) score tile per head group instead of (Sq, Sk).
+
+    Causality is enforced by masking; key chunks entirely in the future of a
+    query chunk are skipped structurally (inner scan length is bounded by
+    the chunk diagonal), so causal flops stay ~half of the full rectangle.
+    """
+    b, sq0, h, hd = q.shape
+    sk0, kh, hd_v = v.shape[1], v.shape[2], v.shape[3]
+    rep = h // kh
+    qc = min(_Q_CHUNK, sq0)
+    kc = min(_K_CHUNK, sk0)
+    # pad both sequence axes to chunk multiples (e.g. whisper's 1500-frame
+    # cross-attention); padded keys are masked, padded queries sliced off
+    pad_q = (-sq0) % qc
+    pad_k = (-sk0) % kc
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    sq, sk = sq0 + pad_q, sk0 + pad_k
+    nq, nk = sq // qc, sk // kc
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    qr = q.reshape(b, nq, qc, kh, rep, hd)
+    kr = k.reshape(b, nk, kc, kh, hd)
+    vr = v.reshape(b, nk, kc, kh, hd_v)
+
+    @jax.checkpoint  # flash-style: recompute score tiles in bwd, O(tile) memory
+    def q_block(carry, qi):
+        q_blk = qr[:, qi]  # (b, qc, kh, rep, hd)
+
+        def k_block(state, ki):
+            m, l, acc = state
+            k_blk = kr[:, ki]
+            v_blk = vr[:, ki]
+            s = jnp.einsum("bqkre,bske->bkrqs", q_blk, k_blk).astype(jnp.float32) * scale
+            kpos = ki * kc + jnp.arange(kc)[None, :]
+            if causal:
+                qpos = qi * qc + jnp.arange(qc)[:, None] + q_offset
+                s = jnp.where(kpos <= qpos, s, -1e30)
+            if pad_k:
+                s = jnp.where(kpos[0] < sk0, s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkrqs,bske->bkrqe", p.astype(v_blk.dtype), v_blk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kh, rep, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kh, rep, qc), jnp.float32)
+        a0 = jnp.zeros((b, kh, rep, qc, hd_v), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(k_block, (m0, l0, a0), jnp.arange(nk))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None])  # (b,kh,rep,qc,hd_v)
+        return carry, out.transpose(0, 3, 1, 2, 4)  # (b,qc,kh,rep,hd_v)
+
+    _, outs = jax.lax.scan(q_block, 0, jnp.arange(nq))  # (nq, b, qc, kh, rep, hd_v)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, h, hd_v)
+    if pad_q:
+        out = out[:, :sq0]
+    return out.astype(v.dtype)
+
+
+def _sdpa(q, k, v, causal: bool, q_offset=0):
+    """q/k (B,S,·,hd_qk), v (B,Sk,K,hd_v) with GQA head repetition.
+    hd_v may differ from hd_qk (MLA).  Long sequences route to the chunked
+    online-softmax path."""
+    sq, sk = q.shape[1], v.shape[1]
+    if sq * sk > _CHUNKED_THRESHOLD and sq > 1:
+        return _sdpa_chunked(q, k, v, causal, q_offset)
+    return _sdpa_dense(q, k, v, causal, q_offset)
+
+
+def attention(params, cfg: ModelConfig, x, positions, causal=True):
+    """Full-sequence attention (training / prefill)."""
+    q, k, v = _qkv(params, cfg, x, positions)
+    out = _sdpa(q, k, v, causal)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"])
+
+
+def attention_with_kv(params, cfg: ModelConfig, x, positions, causal=True):
+    """Prefill variant: also returns the (k, v) tensors for cache fill."""
+    q, k, v = _qkv(params, cfg, x, positions)
+    out = _sdpa(q, k, v, causal)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"]), k, v
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> dict:
+    k, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, max_seq, k, hd), dtype),
+        "v": jnp.zeros((batch, max_seq, k, hd), dtype),
+    }
+
+
+def decode_attention(params, cfg: ModelConfig, x, cache: dict, pos: jnp.ndarray,
+                     rope_positions=None):
+    """One-token decode. x (B,1,D); pos (B,1) absolute position (cache slot);
+    rope_positions defaults to pos but may carry the (3,B,1) M-RoPE streams.
+    Returns (out (B,1,D), new_cache)."""
+    q, k_new, v_new = _qkv(params, cfg, x, pos if rope_positions is None else rope_positions)
+    b = x.shape[0]
+    oh = jax.nn.one_hot(pos[:, 0], cache["k"].shape[1], dtype=cache["k"].dtype)  # (B, S_max)
+    k_cache = cache["k"] + oh[:, :, None, None] * k_new
+    v_cache = cache["v"] + oh[:, :, None, None] * v_new
+    # mask: positions <= pos are valid
+    sk = k_cache.shape[1]
+    valid = jnp.arange(sk)[None, :] <= pos  # (B, S_max)
+    kh = cfg.n_kv_heads
+    rep = cfg.n_heads // kh
+    qr = q.reshape(b, 1, kh, rep, cfg.hd)
+    scores = jnp.einsum("bqkre,bske->bkrqs", qr, k_cache).astype(jnp.float32)
+    scores = scores / jnp.sqrt(cfg.hd).astype(jnp.float32)
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkrqs,bske->bqkre", probs, v_cache).reshape(b, 1, cfg.n_heads, cfg.hd)
+    out = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    return out, {"k": k_cache, "v": v_cache}
+
+
+# --- DeepSeek MLA (Multi-head Latent Attention) -------------------------------
+
+def init_mla(rng, cfg: ModelConfig, dtype) -> dict:
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(rng, 8)
+    p = {}
+    if m.q_lora:
+        p["wq_a"] = layers.normal_init(ks[0], (d, m.q_lora), dtype=dtype)
+        p["q_a_norm"] = jnp.ones((m.q_lora,), dtype)
+        p["wq_b"] = layers.normal_init(ks[1], (m.q_lora, h, m.d_nope + m.d_rope), dtype=dtype)
+    else:
+        p["wq"] = layers.normal_init(ks[0], (d, h, m.d_nope + m.d_rope), dtype=dtype)
+    p["wkv_a"] = layers.normal_init(ks[2], (d, m.kv_lora + m.d_rope), dtype=dtype)
+    p["kv_a_norm"] = jnp.ones((m.kv_lora,), dtype)
+    p["wkv_b"] = layers.normal_init(ks[3], (m.kv_lora, h, m.d_nope + m.d_v), dtype=dtype)
+    p["wo"] = layers.normal_init(ks[4], (h, m.d_v, d), dtype=dtype)
+    return p
+
+
+def _mla_q(params, cfg: ModelConfig, x, positions):
+    m = cfg.mla
+    if m.q_lora:
+        qa = layers.rms_norm(x @ params["wq_a"], params["q_a_norm"])
+        q = jnp.einsum("bsl,lhe->bshe", qa, params["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    q_nope, q_rope = q[..., : m.d_nope], q[..., m.d_nope :]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_kv_latent(params, cfg: ModelConfig, x, positions):
+    """Compressed latent (B,S,kv_lora) + shared rotary key (B,S,d_rope)."""
+    m = cfg.mla
+    kv = x @ params["wkv_a"]  # (B, S, kv_lora + d_rope)
+    c_kv = layers.rms_norm(kv[..., : m.kv_lora], params["kv_a_norm"])
+    k_rope = kv[..., m.kv_lora :][:, :, None, :]  # (B,S,1,d_rope)
+    k_rope = layers.apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_attention(params, cfg: ModelConfig, x, positions, causal=True):
+    """Training/prefill MLA: expand latent to per-head k/v, standard SDPA."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    c_kv, k_rope = _mla_kv_latent(params, cfg, x, positions)
+    kv = jnp.einsum("bsl,lhe->bshe", c_kv, params["wkv_b"])  # (B,S,H,nope+v)
+    k_nope, v = kv[..., : m.d_nope], kv[..., m.d_nope :]
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], (b, s, cfg.n_heads, m.d_rope))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    out = _sdpa(q, k, v, causal)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"])
+
+
+def mla_attention_with_cache(params, cfg: ModelConfig, x, positions, causal=True):
+    """Prefill variant: also returns (c_kv, k_rope) latents for cache fill."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    c_kv, k_rope = _mla_kv_latent(params, cfg, x, positions)
+    kv = jnp.einsum("bsl,lhe->bshe", c_kv, params["wkv_b"])
+    k_nope, v = kv[..., : m.d_nope], kv[..., m.d_nope :]
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], (b, s, cfg.n_heads, m.d_rope))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    out = _sdpa(q, k, v, causal)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"]), c_kv, k_rope
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> dict:
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, m.kv_lora), dtype),
+        "k_rope": jnp.zeros((batch, max_seq, m.d_rope), dtype),
+    }
+
+
+def mla_decode_attention(params, cfg: ModelConfig, x, cache: dict, pos: jnp.ndarray,
+                         rope_positions=None):
+    """Absorbed-matmul MLA decode: attention runs in the 512-d latent space;
+    per-token cache is kv_lora + d_rope floats (the paper's 576 vs 32k for
+    full MHA).  W_kv_b is absorbed into the query/output sides."""
+    m = cfg.mla
+    b = x.shape[0]
+    rp = pos if rope_positions is None else rope_positions
+    q_nope, q_rope = _mla_q(params, cfg, x, rp)  # (B,1,H,·)
+    c_new, r_new = _mla_kv_latent(params, cfg, x, rp)  # (B,1,L), (B,1,R)
+    oh = jax.nn.one_hot(pos[:, 0], cache["c_kv"].shape[1], dtype=cache["c_kv"].dtype)
+    c_cache = cache["c_kv"] + oh[:, :, None] * c_new
+    r_cache = cache["k_rope"] + oh[:, :, None] * r_new
+    wkv_b = params["wkv_b"]  # (L, H, nope+v)
+    wk_b, wv_b = wkv_b[..., : m.d_nope], wkv_b[..., m.d_nope :]
+    # absorb: q_lat = q_nope @ wk_b^T  -> score against latent cache directly
+    q_lat = jnp.einsum("bqhe,lhe->bqhl", q_nope, wk_b)  # (B,1,H,L)
+    scores = (
+        jnp.einsum("bqhl,bsl->bhqs", q_lat, c_cache)
+        + jnp.einsum("bqhe,bse->bhqs", q_rope, r_cache)
+    ).astype(jnp.float32) / jnp.sqrt(m.d_nope + m.d_rope).astype(jnp.float32)
+    valid = jnp.arange(c_cache.shape[1])[None, :] <= pos
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(c_cache.dtype)
+    o_lat = jnp.einsum("bhqs,bsl->bqhl", probs, c_cache)  # (B,1,H,L)
+    o = jnp.einsum("bqhl,lhe->bqhe", o_lat, wv_b)  # (B,1,H,d_v)
+    out = jnp.einsum("bshe,hed->bsd", o, params["wo"])
+    return out, {"c_kv": c_cache, "k_rope": r_cache}

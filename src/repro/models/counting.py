@@ -1,0 +1,34 @@
+"""Analytic parameter counts (for MODEL_FLOPS = 6·N·D roofline ratios).
+
+Total counts come from `jax.eval_shape` over the real init (exact, zero
+maintenance); MoE active counts subtract the non-activated routed experts.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def _abstract_params(cfg):
+    from .lm import LM  # local import to avoid a cycle
+    model = LM(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def param_count(cfg) -> int:
+    shapes = _abstract_params(cfg)
+    # python-int product: stacked leaves exceed int32 (e.g. 64x4096x16384)
+    return sum(math.prod(l.shape) for l in jax.tree_util.tree_leaves(shapes))
+
+
+def active_param_count(cfg) -> int:
+    """Params touched per token: total minus the routed experts not selected."""
+    total = param_count(cfg)
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    per_expert = 3 * cfg.d_model * m.d_expert_ff
+    n_moe_layers = cfg.n_layers - m.n_dense_layers
+    inactive = (m.n_routed - m.top_k) * per_expert * n_moe_layers
+    return total - inactive

@@ -1,0 +1,32 @@
+"""Feed-forward blocks: SwiGLU (llama-family) and GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+
+def init_ffn(rng, d_model: int, d_ff: int, act: str, dtype) -> dict:
+    ks = jax.random.split(rng, 3)
+    if act == "swiglu":
+        return {
+            "w_gate": layers.normal_init(ks[0], (d_model, d_ff), dtype=dtype),
+            "w_up": layers.normal_init(ks[1], (d_model, d_ff), dtype=dtype),
+            "w_down": layers.normal_init(ks[2], (d_ff, d_model), dtype=dtype),
+        }
+    return {
+        "w_up": layers.normal_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": layers.normal_init(ks[1], (d_ff, d_model), dtype=dtype),
+        "b_down": jnp.zeros((d_model,), dtype),
+    }
+
+
+def ffn(params: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "swiglu":
+        g = jax.nn.silu((x @ params["w_gate"]).astype(jnp.float32))
+        u = (x @ params["w_up"]).astype(jnp.float32)
+        return ((g * u).astype(x.dtype)) @ params["w_down"]
+    h = jax.nn.gelu((x @ params["w_up"] + params["b_up"]).astype(jnp.float32))
+    return h.astype(x.dtype) @ params["w_down"] + params["b_down"]

@@ -1,0 +1,136 @@
+"""Shared LM layers: norms, embeddings (with BUM-merged grads), RoPE variants.
+
+The Embedding's `dedup_grad` option is the paper's technique transferred to
+LMs (DESIGN.md §5): a vocab table's backward is a scatter-add with massive
+index duplication (every repeated token), exactly the access pattern the BUM
+merges — we route it through kernels.grid_update.merged_scatter_add.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.grid_update import ops as gu_ops
+
+
+# --- init helpers ------------------------------------------------------------
+
+def normal_init(rng, shape, std=0.02, dtype=jnp.float32):
+    return (jax.random.normal(rng, shape, jnp.float32) * std).astype(dtype)
+
+
+# --- norms -------------------------------------------------------------------
+
+def rms_norm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# --- embedding with optional BUM-merged gradient ------------------------------
+
+def make_embed_lookup(dedup_grad: str | bool = "naive"):
+    """Returns lookup(table (V,D), ids (...,)) -> (..., D) with custom VJP.
+
+    dedup_grad: 'naive' (XLA scatter — best under data parallelism, see
+    EXPERIMENTS.md §Perf iteration 3), 'merged' (global BUM sort-merge —
+    wins for small-F tables like the hash grids), or 'windowed' (the
+    paper-faithful sliding-window merge: bounded live set per shard).
+    """
+    if dedup_grad is True:
+        dedup_grad = "merged"
+    if dedup_grad is False:
+        dedup_grad = "naive"
+
+    @jax.custom_vjp
+    def lookup(table, ids):
+        return table[ids]
+
+    def fwd(table, ids):
+        return table[ids], (ids, table.shape[0], jnp.zeros((0,), table.dtype))
+
+    def bwd(res, g):
+        ids, vocab, proto = res
+        flat_ids = ids.reshape(-1).astype(jnp.int32)
+        flat_g = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+        zero = jnp.zeros((vocab, g.shape[-1]), jnp.float32)
+        if dedup_grad == "merged":
+            gt = gu_ops.merged_scatter_add(zero, flat_ids, flat_g)
+        elif dedup_grad == "windowed":
+            gt = gu_ops.windowed_scatter_add(zero, flat_ids, flat_g)
+        else:
+            gt = zero.at[flat_ids].add(flat_g)
+        return gt.astype(proto.dtype), None
+
+    lookup.defvjp(fwd, bwd)
+    return lookup
+
+
+embed_lookup_merged = make_embed_lookup("merged")
+embed_lookup_windowed = make_embed_lookup("windowed")
+embed_lookup_naive = make_embed_lookup("naive")
+
+
+# --- RoPE variants -------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """Standard interleaved-as-halves RoPE (llama convention).
+
+    x: (..., S, H, hd); positions: broadcastable to (..., S).
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (..., S, 1, hd/2)
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2 :]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def apply_rope_2d(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """ChatGLM-style 2D RoPE: rotary on the first half of head_dim only."""
+    hd = x.shape[-1]
+    rot, keep = x[..., : hd // 2], x[..., hd // 2 :]
+    rot = apply_rope(rot, positions, theta)
+    return jnp.concatenate([rot, keep], axis=-1)
+
+
+def apply_mrope(
+    x: jnp.ndarray, positions_3d: jnp.ndarray, sections=(16, 24, 24), theta: float = 1000000.0
+) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE: head_dim/2 frequency slots are split into (t, h, w)
+    sections, each rotated by its own position stream.
+
+    x: (B, S, H, hd); positions_3d: (3, B, S) — temporal, height, width.
+    `sections` counts are in half-dim units and must sum to hd/2.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    # build a per-slot position by section
+    splits = []
+    start = 0
+    for axis, count in enumerate(sections):
+        pos = positions_3d[axis]  # (B, S)
+        ang = pos[..., None].astype(jnp.float32) * freqs[start : start + count]
+        splits.append(ang)
+        start += count
+    ang = jnp.concatenate(splits, axis=-1)  # (B, S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

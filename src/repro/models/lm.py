@@ -1,0 +1,290 @@
+"""Top-level LM: init / forward / loss / prefill / decode for all 10 archs.
+
+Pure-functional: `LM` holds only config + mesh; params/caches are pytrees.
+`init_abstract()` gives ShapeDtypeStruct params for the no-allocation dry-run.
+
+Positional streams: standard/rope2d take (B,S) int positions; mrope takes
+(3,B,S).  Whisper uses sinusoidal added embeddings (deviation from learned
+tables, noted in DESIGN.md — keeps param shapes independent of seq length).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, layers, transformer as tfm
+from .config import ModelConfig
+from .transformer import segments
+
+
+def sinusoidal(seq: int, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    pos = jnp.arange(seq)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig, mesh=None, tp_logits: bool = True,
+                 act_spec=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.tp_logits = tp_logits  # vocab-shard the logits constraint (TP policy)
+        # activation PartitionSpec for (B, S, D) residual-stream tensors;
+        # constraining at segment boundaries pins GSPMD's propagation into
+        # the scanned while bodies (without it the body can fall back to
+        # replicated compute — §Perf iteration 2 post-mortem)
+        self.act_spec = act_spec
+        self.segs = segments(cfg)
+        self.dtype = jnp.dtype(cfg.dtype)
+        self._embed_lookup = (
+            layers.embed_lookup_merged if cfg.dedup_embed_grad else layers.embed_lookup_naive
+        )
+
+    def _constrain(self, x):
+        if self.mesh is None or self.act_spec is None or x.ndim != 3:
+            return x
+        from jax.sharding import NamedSharding
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, self.act_spec))
+
+    # ---- params ----
+
+    def init(self, rng: jax.Array) -> dict:
+        cfg, dtype = self.cfg, self.dtype
+        ks = iter(jax.random.split(rng, 16 + len(self.segs)))
+        params: dict[str, Any] = {
+            "embed": layers.normal_init(next(ks), (cfg.vocab, cfg.d_model), dtype=dtype),
+            "final_norm": tfm._init_norm(cfg, dtype),
+        }
+        for i, (kind, n) in enumerate(self.segs):
+            params[f"seg{i}_{kind}"] = tfm.init_segment(next(ks), cfg, kind, n, dtype)
+        if cfg.hybrid_attn_every:
+            params["shared_attn"] = tfm.init_block(next(ks), cfg, "attn_dense", dtype)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = layers.normal_init(next(ks), (cfg.d_model, cfg.vocab), dtype=dtype)
+        if cfg.enc_dec:
+            params["enc_segs"] = tfm.init_segment(next(ks), cfg, "enc_attn", cfg.n_encoder_layers, dtype)
+            params["enc_norm"] = tfm._init_norm(cfg, dtype)
+        if cfg.mtp_depth:
+            params["mtp"] = {
+                "proj": layers.normal_init(next(ks), (2 * cfg.d_model, cfg.d_model), dtype=dtype),
+                "block": tfm.init_block(next(ks), cfg, self.segs[-1][0], dtype),
+                "norm_h": tfm._init_norm(cfg, dtype),
+                "norm_e": tfm._init_norm(cfg, dtype),
+            }
+        return params
+
+    def init_abstract(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # ---- positions ----
+
+    def default_positions(self, batch: int, seq: int, offset: int = 0):
+        pos = jnp.arange(offset, offset + seq, dtype=jnp.int32)[None, :].repeat(batch, 0)
+        if self.cfg.rope == "mrope":
+            return jnp.broadcast_to(pos[None], (3,) + pos.shape)  # degenerate text M-RoPE
+        return pos
+
+    # ---- embedding / head ----
+
+    def embed(self, params, tokens):
+        return self._embed_lookup(params["embed"], tokens).astype(self.dtype)
+
+    def logits(self, params, x):
+        head = params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+        out = (x @ head).astype(jnp.float32)
+        mesh = self.mesh
+        if self.tp_logits and mesh is not None and "model" in mesh.shape \
+                and self.cfg.vocab % mesh.shape["model"] == 0:
+            from jax.sharding import PartitionSpec as P, NamedSharding
+            dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+            out = jax.lax.with_sharding_constraint(
+                out, NamedSharding(mesh, P(dp, None, "model"))
+            )
+        return out
+
+    # ---- encoder (whisper) ----
+
+    def encode(self, params, encoder_embeds):
+        cfg = self.cfg
+        b, s, _ = encoder_embeds.shape
+        x = encoder_embeds.astype(self.dtype) + sinusoidal(s, cfg.d_model, self.dtype)[None]
+        pos = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+        x = tfm.apply_segment(params["enc_segs"], cfg, "enc_attn", x, pos, self.mesh)
+        return tfm.apply_norm(cfg, params["enc_norm"], x)
+
+    # ---- forward (train / prefill logits) ----
+
+    def forward(self, params, tokens=None, embeds=None, positions=None, encoder_embeds=None):
+        cfg = self.cfg
+        if embeds is not None:
+            x = embeds.astype(self.dtype)
+            b, s = x.shape[:2]
+        else:
+            b, s = tokens.shape
+            x = self.embed(params, tokens)
+        if cfg.enc_dec:
+            x = x + sinusoidal(s, cfg.d_model, self.dtype)[None]
+        if positions is None:
+            positions = self.default_positions(b, s)
+        enc_out = self.encode(params, encoder_embeds) if cfg.enc_dec else None
+
+        x = self._constrain(x)
+        for i, (kind, n) in enumerate(self.segs):
+            seg_params = params[f"seg{i}_{kind}"]
+            seg_kind = "dec_attn" if (cfg.enc_dec and kind == "attn_dense") else kind
+            if cfg.hybrid_attn_every and kind in ("mamba1", "mamba2"):
+                x = tfm.apply_hybrid_segment(
+                    seg_params, cfg, kind, x, positions, params["shared_attn"], self.mesh,
+                    constrain=self._constrain,
+                )
+            else:
+                x = tfm.apply_segment(seg_params, cfg, seg_kind, x, positions, self.mesh,
+                                      enc_out, constrain=self._constrain)
+            x = self._constrain(x)
+        h = tfm.apply_norm(cfg, params["final_norm"], x)
+        return self.logits(params, h), h
+
+    # ---- loss ----
+
+    def loss(self, params, batch: dict) -> jnp.ndarray:
+        """batch: tokens (B,S) plus optional embeds/encoder_embeds/positions.
+        Next-token CE; MTP head adds the deepseek-v3 auxiliary loss."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        logits, h = self.forward(
+            params,
+            tokens=None if "embeds" in batch else tokens,
+            embeds=batch.get("embeds"),
+            positions=batch.get("positions"),
+            encoder_embeds=batch.get("encoder_embeds"),
+        )
+        targets = tokens[:, 1:]
+        lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, targets[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        loss = nll.mean()
+        if cfg.mtp_depth:
+            loss = loss + 0.3 * self._mtp_loss(params, h, tokens)
+        return loss
+
+    def _mtp_loss(self, params, h, tokens):
+        """Depth-1 multi-token prediction: from h_t and emb(t+1), predict t+2."""
+        cfg = self.cfg
+        mtp = params["mtp"]
+        emb_next = self.embed(params, tokens[:, 1:])          # (B, S-1, D)
+        h_trunc = h[:, :-1]                                   # (B, S-1, D)
+        z = jnp.concatenate(
+            [tfm.apply_norm(cfg, mtp["norm_h"], h_trunc),
+             tfm.apply_norm(cfg, mtp["norm_e"], emb_next)], axis=-1
+        ) @ mtp["proj"]
+        pos = self.default_positions(z.shape[0], z.shape[1])
+        kind = self.segs[-1][0]
+        z = tfm.apply_block(mtp["block"], cfg, kind, z, pos, self.mesh)
+        logits = self.logits(params, tfm.apply_norm(cfg, params["final_norm"], z))
+        targets = tokens[:, 2:]
+        lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, targets[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        return nll.mean()
+
+    # ---- serving ----
+
+    def init_caches(self, batch: int, max_seq: int) -> dict:
+        cfg = self.cfg
+        caches: dict[str, Any] = {}
+        for i, (kind, n) in enumerate(self.segs):
+            seg_kind = "dec_attn" if (cfg.enc_dec and kind == "attn_dense") else kind
+            one = tfm.init_block_cache(cfg, seg_kind, batch, max_seq, self.dtype)
+            caches[f"seg{i}_{kind}"] = jax.tree.map(
+                lambda t: jnp.zeros((n,) + t.shape, t.dtype), one
+            )
+        if cfg.hybrid_attn_every:
+            n_groups = cfg.n_layers // cfg.hybrid_attn_every
+            one = tfm.init_block_cache(cfg, "attn_dense", batch, max_seq, self.dtype)
+            caches["shared_attn"] = jax.tree.map(
+                lambda t: jnp.zeros((n_groups,) + t.shape, t.dtype), one
+            )
+        return caches
+
+    def prefill(self, params, tokens=None, embeds=None, positions=None, encoder_embeds=None,
+                max_seq: int | None = None):
+        """Run the prompt, returning (last-token logits, filled caches, enc_out).
+
+        Caches hold the prompt's K/V (or SSM states) laid out exactly as
+        decode_step expects; decode continues at pos = prompt_len.  Pass
+        `max_seq` > prompt length to leave room for generated tokens.
+        """
+        cfg = self.cfg
+        if embeds is not None:
+            x = embeds.astype(self.dtype)
+            b, s = x.shape[:2]
+        else:
+            b, s = tokens.shape
+            x = self.embed(params, tokens)
+        if cfg.enc_dec:
+            x = x + sinusoidal(s, cfg.d_model, self.dtype)[None]
+        if positions is None:
+            positions = self.default_positions(b, s)
+        enc_out = self.encode(params, encoder_embeds) if cfg.enc_dec else None
+
+        caches: dict[str, Any] = {}
+        for i, (kind, n) in enumerate(self.segs):
+            seg_params = params[f"seg{i}_{kind}"]
+            seg_kind = "dec_attn" if (cfg.enc_dec and kind == "attn_dense") else kind
+            if cfg.hybrid_attn_every and kind in ("mamba1", "mamba2"):
+                x, nc, nsh = tfm.apply_hybrid_segment_prefill(
+                    seg_params, cfg, kind, x, positions, params["shared_attn"], self.mesh,
+                    max_seq=max_seq,
+                )
+                caches["shared_attn"] = nsh
+            else:
+                x, nc = tfm.apply_segment_prefill(
+                    seg_params, cfg, seg_kind, x, positions, self.mesh, enc_out,
+                    max_seq=max_seq, constrain=self._constrain,
+                )
+            caches[f"seg{i}_{kind}"] = nc
+        h = tfm.apply_norm(cfg, params["final_norm"], x)
+        logits = self.logits(params, h[:, -1:, :])
+        return logits[:, 0], caches, enc_out
+
+    def decode_step(self, params, caches, tokens, pos, encoder_out=None):
+        """tokens (B,1) int32, pos (B,1) absolute positions.
+        Returns (logits (B,V) f32, new_caches)."""
+        cfg = self.cfg
+        x = self.embed(params, tokens)
+        if cfg.enc_dec:
+            # sinusoidal at the absolute position
+            d = cfg.d_model
+            x = x + sinusoidal_at(pos, d, self.dtype)
+        rope_positions = None
+        if cfg.rope == "mrope":
+            rope_positions = jnp.broadcast_to(pos[None], (3,) + pos.shape)
+        new_caches = {}
+        for i, (kind, n) in enumerate(self.segs):
+            seg_params = params[f"seg{i}_{kind}"]
+            seg_caches = caches[f"seg{i}_{kind}"]
+            seg_kind = "dec_attn" if (cfg.enc_dec and kind == "attn_dense") else kind
+            if cfg.hybrid_attn_every and kind in ("mamba1", "mamba2"):
+                x, nc, nsh = tfm.apply_hybrid_segment_decode(
+                    seg_params, cfg, kind, x, seg_caches, pos,
+                    params["shared_attn"], caches["shared_attn"], self.mesh,
+                )
+                new_caches["shared_attn"] = nsh
+            else:
+                x, nc = tfm.apply_segment_decode(
+                    seg_params, cfg, seg_kind, x, seg_caches, pos, self.mesh, encoder_out,
+                    rope_positions,
+                )
+            new_caches[f"seg{i}_{kind}"] = nc
+        h = tfm.apply_norm(cfg, params["final_norm"], x)
+        logits = self.logits(params, h)
+        return logits[:, 0], new_caches
+
+
+def sinusoidal_at(pos: jnp.ndarray, d: int, dtype) -> jnp.ndarray:
+    """Sinusoidal embedding at arbitrary positions. pos (B,1) -> (B,1,D)."""
+    dim = jnp.arange(d // 2)[None, None, :].astype(jnp.float32)
+    ang = pos[..., None].astype(jnp.float32) / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)

@@ -1,0 +1,278 @@
+"""Mixture-of-Experts: router + shared experts + two execution paths.
+
+* `dense` — every expert runs on every token, gates combine.  Used by smoke
+  tests and tiny configs; also the numerical oracle for the EP path.
+* `ep` — production expert parallelism: tokens are sharded over the 'model'
+  mesh axis inside a shard_map, routed, exchanged with all_to_all to their
+  expert-owner shards (DeepSeek-style EP), processed by a capacity-bounded
+  grouped matmul (scan over local experts), and returned by a second
+  all_to_all.  Token order, gates and drops are tracked explicitly.
+* decode (S == 1): tokens replicated over 'model'; each shard computes only
+  its local experts' contributions and a psum combines — the right trade for
+  a few tokens where dispatch overhead would dominate.
+
+Shared experts are algebraically fused into a single FFN of width
+n_shared * d_expert_ff (sum of parallel SwiGLUs == one wider SwiGLU).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers
+from .ffn import init_ffn, ffn
+from .config import ModelConfig, MoEConfig
+
+
+# --- params -------------------------------------------------------------------
+
+def init_moe(rng, cfg: ModelConfig, dtype) -> dict:
+    m: MoEConfig = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(rng, 6)
+    p = {
+        "router": layers.normal_init(ks[0], (d, m.n_routed), dtype=jnp.float32),
+        "router_bias": jnp.zeros((m.n_routed,), jnp.float32),  # v3 balance bias
+        "w_gate": layers.normal_init(ks[1], (m.n_routed, d, m.d_expert_ff), dtype=dtype),
+        "w_up": layers.normal_init(ks[2], (m.n_routed, d, m.d_expert_ff), dtype=dtype),
+        "w_down": layers.normal_init(ks[3], (m.n_routed, m.d_expert_ff, d), dtype=dtype),
+    }
+    if m.n_shared:
+        p["shared"] = init_ffn(ks[4], d, m.n_shared * m.d_expert_ff, "swiglu", dtype)
+    return p
+
+
+# --- routing ------------------------------------------------------------------
+
+def route(params, x_flat, m: MoEConfig):
+    """x_flat (N, D) -> (gates (N, k) f32, expert_ids (N, k) i32)."""
+    logits = (x_flat.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
+    if m.score == "sigmoid":  # deepseek-v3: sigmoid scores + selection bias
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + params["router_bias"]
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+        sel = scores
+    _, ids = jax.lax.top_k(sel, m.top_k)
+    gates = jnp.take_along_axis(scores, ids, axis=-1)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9) * m.route_scale
+    return gates, ids.astype(jnp.int32)
+
+
+def _expert_ffn(w_gate, w_up, w_down, x):
+    g = jax.nn.silu((x @ w_gate).astype(jnp.float32))
+    u = (x @ w_up).astype(jnp.float32)
+    return ((g * u).astype(x.dtype)) @ w_down
+
+
+# --- dense path (oracle / smoke) -----------------------------------------------
+
+def moe_dense(params, x, cfg: ModelConfig):
+    m = cfg.moe
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    gates, ids = route(params, xf, m)
+    outs = jax.vmap(lambda wg, wu, wd: _expert_ffn(wg, wu, wd, xf))(
+        params["w_gate"], params["w_up"], params["w_down"]
+    )  # (E, N, D)
+    onehot = jax.nn.one_hot(ids, m.n_routed, dtype=jnp.float32)  # (N, k, E)
+    combine = jnp.einsum("nk,nke->ne", gates, onehot)  # (N, E)
+    y = jnp.einsum("ne,end->nd", combine.astype(outs.dtype), outs)
+    y = y.reshape(b, s, d)
+    if m.n_shared:
+        y = y + ffn(params["shared"], x, "swiglu")
+    return y
+
+
+# --- EP path -------------------------------------------------------------------
+
+def _group_pack(sort_key, n_groups: int, capacity: int):
+    """Given integer group keys (A,), compute a stable grouped layout.
+
+    Returns (order (A,), group (A,) sorted keys, slot (A,) rank within group,
+    counts (n_groups,)).  Entries with slot >= capacity must be dropped by
+    the caller.
+    """
+    a = sort_key.shape[0]
+    order = jnp.argsort(sort_key, stable=True)
+    sorted_key = sort_key[order]
+    counts = jnp.bincount(sort_key, length=n_groups)
+    starts = jnp.cumsum(counts) - counts  # (n_groups,)
+    slot = jnp.arange(a, dtype=jnp.int32) - starts[sorted_key]
+    return order, sorted_key, slot, counts
+
+
+def _local_grouped_ffn(params_local, x_sorted, e_sorted, n_local: int, capacity: int):
+    """Scan over local experts; each takes a capacity-window dynamic slice.
+
+    x_sorted (M, D) sorted by e_sorted (M,) in [0, n_local] (n_local = invalid
+    sentinel sorted last).  Returns y (M, D) aligned with x_sorted.  Tokens
+    beyond an expert's capacity window are dropped (standard MoE behaviour).
+
+    The buffer is padded with `capacity` zero rows so a group start near the
+    end never needs clamping (clamping would desynchronize the keep mask).
+    """
+    m_tot, d = x_sorted.shape
+    counts = jnp.bincount(e_sorted, length=n_local + 1)[:n_local]
+    starts = jnp.cumsum(counts) - counts
+    x_pad = jnp.concatenate([x_sorted, jnp.zeros((capacity, d), x_sorted.dtype)])
+
+    def body(y, inp):
+        wg, wu, wd, start, count = inp
+        seg = jax.lax.dynamic_slice_in_dim(x_pad, start, capacity, axis=0)
+        out = _expert_ffn(wg, wu, wd, seg)
+        keep = (jnp.arange(capacity, dtype=jnp.int32) < count)[:, None]
+        out = jnp.where(keep, out, 0)
+        prev = jax.lax.dynamic_slice_in_dim(y, start, capacity, axis=0)
+        y = jax.lax.dynamic_update_slice_in_dim(y, prev + out, start, axis=0)
+        return y, None
+
+    y0 = jnp.zeros((m_tot + capacity, d), x_sorted.dtype)
+    # python-unrolled expert loop (not lax.scan): the per-expert matmuls
+    # pipeline better on the MXU, and XLA's cost analysis counts a while
+    # body once — unrolling keeps the dry-run roofline exact
+    y = y0
+    for le in range(n_local):
+        y, _ = body(y, (params_local["w_gate"][le], params_local["w_up"][le],
+                        params_local["w_down"][le], starts[le], counts[le]))
+    return y[:m_tot]
+
+
+def _moe_ep_local(params, x, m: MoEConfig, n_model: int, capacity_factor: float,
+                  axis_name="model"):
+    """Per-shard body (inside shard_map). x (b_loc, s_loc, d).
+    axis_name may be a tuple of mesh axes (multi-axis EP)."""
+    b, s, d = x.shape
+    n = b * s
+    xf = x.reshape(n, d)
+    gates, ids = route(params, xf, m)  # (n, k)
+    k = m.top_k
+    e_loc_count = m.n_routed // n_model
+
+    a = n * k
+    e_flat = ids.reshape(-1)
+    tok_idx = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    owner = e_flat // e_loc_count  # destination shard
+
+    cap = int(math.ceil(a / n_model * capacity_factor))
+    order, sorted_owner, slot, _ = _group_pack(owner, n_model, cap)
+    valid = slot < cap
+
+    # scatter into (n_model, cap) send buffers; slot >= cap rows drop (mode)
+    send_x = jnp.zeros((n_model, cap, d), x.dtype)
+    send_e = jnp.full((n_model, cap), e_loc_count, jnp.int32)  # sentinel = invalid
+    send_x = send_x.at[sorted_owner, slot].set(xf[tok_idx[order]], mode="drop")
+    send_e = send_e.at[sorted_owner, slot].set(e_flat[order] % e_loc_count, mode="drop")
+
+    # exchange: recv[j] = what shard j sent to me
+    recv_x = jax.lax.all_to_all(send_x, axis_name, split_axis=0, concat_axis=0, tiled=True)
+    recv_e = jax.lax.all_to_all(send_e, axis_name, split_axis=0, concat_axis=0, tiled=True)
+
+    mt = n_model * cap
+    rx = recv_x.reshape(mt, d)
+    re = recv_e.reshape(mt)
+    cap2 = int(math.ceil(mt / max(e_loc_count, 1) * capacity_factor))
+    cap2 = min(cap2, mt)
+    order2, sorted_e, slot2, _ = _group_pack(re, e_loc_count + 1, mt)
+    x_sorted = rx[order2]
+    y_sorted = _local_grouped_ffn(params, x_sorted, sorted_e, e_loc_count, cap2)
+    # unsort back to recv layout
+    y_flat = jnp.zeros_like(rx).at[order2].set(y_sorted)
+    y_back = jax.lax.all_to_all(
+        y_flat.reshape(n_model, cap, d), axis_name, split_axis=0, concat_axis=0, tiled=True
+    )
+
+    # gather each assignment's result and combine with gates
+    res = y_back[sorted_owner, jnp.minimum(slot, cap - 1)]  # aligned with `order`
+    res = jnp.where(valid[:, None], res, 0)
+    y_assign = jnp.zeros((a, d), x.dtype).at[order].set(res)
+    y_tok = (y_assign.reshape(n, k, d) * gates[..., None].astype(x.dtype)).sum(axis=1)
+    return y_tok.reshape(b, s, d)
+
+
+def moe_ep(params, x, cfg: ModelConfig, mesh, dp_axes=("pod", "data"), capacity_factor: float = 1.3):
+    """Expert-parallel MoE. x (B, S, D) -> (B, S, D).
+
+    EP may span multiple mesh axes (cfg.moe.ep_axes): deepseek-v3 uses
+    ('data','model') = 256-way, one expert per device, so expert weights are
+    never all-gathered and their grads never cross-reduced."""
+    m = cfg.moe
+    ep_axes = tuple(a for a in m.ep_axes if a in mesh.shape)
+    n_ep = 1
+    for a in ep_axes:
+        n_ep *= mesh.shape[a]
+    axis_name = ep_axes if len(ep_axes) > 1 else ep_axes[0]
+    e_spec = ep_axes if len(ep_axes) > 1 else ep_axes[0]
+    # x layout inside the shard_map: batch over the remaining dp axes, seq
+    # over 'model'.  A mesh axis may serve batch AND expert ownership at
+    # once (deepseek-v3: 'data' shards batch for x and the expert dim for
+    # weights; the all_to_all over ('data','model') moves tokens across
+    # both) — that's what makes 256-way EP free of weight gathers.
+    batch_ax = tuple(a for a in dp_axes if a in mesh.shape and a != "model")
+    n_seq = mesh.shape.get("model", 1)
+
+    expert_specs = {"router": P(), "router_bias": P(),
+                    "w_gate": P(e_spec, None, None), "w_up": P(e_spec, None, None),
+                    "w_down": P(e_spec, None, None)}
+    routed = {k: params[k] for k in expert_specs}
+
+    if x.shape[1] == 1:  # decode: local-dense + psum over the EP axes
+        fn = jax.shard_map(
+            partial(_moe_decode_local, m=m, n_model=n_ep, axis_name=axis_name),
+            mesh=mesh, in_specs=(expert_specs, P(batch_ax or None, None, None)),
+            out_specs=P(batch_ax or None, None, None), check_vma=False,
+        )
+        y = fn(routed, x)
+    else:
+        s = x.shape[1]
+        pad = (-s) % n_seq  # seq splits over 'model' for dispatch
+        xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0))) if pad else x
+        fn = jax.shard_map(
+            partial(_moe_ep_local, m=m, n_model=n_ep, capacity_factor=capacity_factor,
+                    axis_name=axis_name),
+            mesh=mesh, in_specs=(expert_specs, P(batch_ax or None, "model", None)),
+            out_specs=P(batch_ax or None, "model", None), check_vma=False,
+        )
+        y = fn(routed, xp)
+        if pad:
+            y = y[:, :s]
+
+    if m.n_shared:
+        y = y + ffn(params["shared"], x, "swiglu")
+    return y
+
+
+def _moe_decode_local(params, x, m: MoEConfig, n_model: int, axis_name="model"):
+    """Decode-path shard body: all local experts on all (few) tokens, psum."""
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    gates, ids = route(params, xf, m)  # routing is replicated (same result on all shards)
+    e_loc_count = m.n_routed // n_model
+    my = jax.lax.axis_index(axis_name)
+    lo = my * e_loc_count
+    outs = jax.vmap(lambda wg, wu, wd: _expert_ffn(wg, wu, wd, xf))(
+        params["w_gate"], params["w_up"], params["w_down"]
+    )  # (E_loc, N, D)
+    onehot = jax.nn.one_hot(ids - lo, e_loc_count, dtype=jnp.float32)  # (N, k, E_loc)
+    combine = jnp.einsum("nk,nke->ne", gates, onehot)
+    y = jnp.einsum("ne,end->nd", combine.astype(outs.dtype), outs)
+    y = jax.lax.psum(y, axis_name)
+    return y.reshape(b, s, d)
+
+
+def moe_layer(params, x, cfg: ModelConfig, mesh=None):
+    """Entry point: picks dense vs EP by config + mesh availability."""
+    m = cfg.moe
+    if m.ep_axis is None or mesh is None:
+        return moe_dense(params, x, cfg)
+    ep_axes = tuple(a for a in m.ep_axes if a in mesh.shape)
+    n_ep = 1
+    for a in ep_axes:
+        n_ep *= mesh.shape[a]
+    if n_ep == 1 or m.n_routed % n_ep != 0:
+        return moe_dense(params, x, cfg)
+    return moe_ep(params, x, cfg, mesh)

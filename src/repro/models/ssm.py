@@ -1,0 +1,228 @@
+"""State-space blocks: Mamba-1 (falcon-mamba) and Mamba-2/SSD (zamba2).
+
+TPU adaptation notes (DESIGN.md §3): the CUDA selective-scan kernel does not
+port; instead both variants use *chunked* formulations that keep the live
+state B x d_inner x d_state instead of materializing it for every timestep:
+
+* mamba1: lax.scan over chunks, associative_scan (Blelloch) within a chunk —
+  O(S/Q) sequential steps, VMEM-sized intermediates.
+* mamba2: the SSD block-matrix form — intra-chunk attention-like matmuls
+  (MXU-friendly) + inter-chunk state recurrence.
+
+Decode keeps O(1) recurrent state: (conv tail, ssm state) per layer — this is
+why the long_500k suite runs for the SSM/hybrid archs only.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ModelConfig, SSMConfig
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    s = cfg.ssm
+    return s.dt_rank or max(cfg.d_model // 16, 1)
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+# --- params -------------------------------------------------------------------
+
+def init_ssm(rng, cfg: ModelConfig, dtype) -> dict:
+    s = cfg.ssm
+    d, di, n = cfg.d_model, d_inner(cfg), s.d_state
+    ks = jax.random.split(rng, 10)
+    if s.kind == "mamba1":
+        r = _dt_rank(cfg)
+        return {
+            "in_proj": layers.normal_init(ks[0], (d, 2 * di), dtype=dtype),
+            "conv_w": layers.normal_init(ks[1], (s.d_conv, di), std=0.2, dtype=dtype),
+            "conv_b": jnp.zeros((di,), dtype),
+            "x_proj": layers.normal_init(ks[2], (di, r + 2 * n), dtype=dtype),
+            "dt_proj": layers.normal_init(ks[3], (r, di), std=r**-0.5, dtype=dtype),
+            "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01, jnp.float32))),
+            "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (di, 1))),
+            "D": jnp.ones((di,), jnp.float32),
+            "out_proj": layers.normal_init(ks[4], (di, d), dtype=dtype),
+        }
+    # mamba2: heads of size headdim, scalar A per head, B/C shared (1 group)
+    p_heads = di // s.headdim
+    conv_ch = di + 2 * n  # conv over x, B, C
+    return {
+        "in_proj": layers.normal_init(ks[0], (d, 2 * di + 2 * n + p_heads), dtype=dtype),
+        "conv_w": layers.normal_init(ks[1], (s.d_conv, conv_ch), std=0.2, dtype=dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((p_heads,), 0.01, jnp.float32))),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, p_heads, dtype=jnp.float32)),
+        "D": jnp.ones((p_heads,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": layers.normal_init(ks[2], (di, d), dtype=dtype),
+    }
+
+
+# --- causal depthwise conv ------------------------------------------------------
+
+def causal_conv(x, w, b, tail=None):
+    """x (B,S,C), w (K,C), b (C,). tail: (B,K-1,C) state from previous tokens.
+    Returns (y (B,S,C), new_tail)."""
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)  # (B, S+K-1, C)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k)) + b
+    new_tail = xp[:, -(k - 1) :, :] if k > 1 else tail
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), new_tail
+
+
+# --- mamba1 ---------------------------------------------------------------------
+
+class SSMState(NamedTuple):
+    h: jnp.ndarray       # mamba1: (B, di, n); mamba2: (B, P, hd, n)
+    conv_tail: jnp.ndarray
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> SSMState:
+    s = cfg.ssm
+    di = d_inner(cfg)
+    if s.kind == "mamba1":
+        return SSMState(
+            jnp.zeros((batch, di, s.d_state), jnp.float32),
+            jnp.zeros((batch, s.d_conv - 1, di), dtype),
+        )
+    p = di // s.headdim
+    return SSMState(
+        jnp.zeros((batch, p, s.headdim, s.d_state), jnp.float32),
+        jnp.zeros((batch, s.d_conv - 1, di + 2 * s.d_state), dtype),
+    )
+
+
+def _mamba1_scan_chunk(h0, a, bx):
+    """h0 (B,d,n); a, bx (B,Q,d,n).  Returns (h (B,Q,d,n), h_end)."""
+    def combine(l, r):
+        return (l[0] * r[0], r[0] * l[1] + r[1])
+    aa, bb = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    h = bb + aa * h0[:, None]
+    return h, h[:, -1]
+
+
+def mamba1(params, cfg: ModelConfig, x, state: SSMState | None = None):
+    """x (B,S,D) -> (y (B,S,D), new_state).  Chunked selective scan."""
+    s = cfg.ssm
+    b, seq, _ = x.shape
+    di, n, r = d_inner(cfg), s.d_state, _dt_rank(cfg)
+    xz = x @ params["in_proj"]
+    xs, z = xz[..., :di], xz[..., di:]
+    tail = state.conv_tail if state is not None else None
+    xs, new_tail = causal_conv(xs, params["conv_w"], params["conv_b"], tail)
+
+    dbc = xs @ params["x_proj"]  # (B,S,r+2n)
+    dt = jax.nn.softplus(
+        (dbc[..., :r] @ params["dt_proj"]).astype(jnp.float32) + params["dt_bias"]
+    )  # (B,S,di)
+    bmat = dbc[..., r : r + n].astype(jnp.float32)   # (B,S,n)
+    cmat = dbc[..., r + n :].astype(jnp.float32)     # (B,S,n)
+    a_cont = -jnp.exp(params["A_log"])               # (di,n)
+
+    q = min(s.chunk, seq)
+    n_chunks, rem = divmod(seq, q)
+    main = n_chunks * q
+    h0 = state.h if state is not None else jnp.zeros((b, di, n), jnp.float32)
+
+    def chunk_body(h, inp):
+        dt_q, b_q, c_q, x_q = inp  # (B,Q,di) (B,Q,n) (B,Q,n) (B,Q,di)
+        a = jnp.exp(dt_q[..., None] * a_cont)                    # (B,Q,di,n)
+        bx = (dt_q * x_q)[..., None] * b_q[:, :, None, :]        # (B,Q,di,n)
+        hs, h_end = _mamba1_scan_chunk(h, a, bx)
+        y = jnp.einsum("bqdn,bqn->bqd", hs, c_q)
+        return h_end, y
+
+    xf32 = xs.astype(jnp.float32)
+    ch = lambda t: t[:, :main].reshape(b, n_chunks, q, *t.shape[2:]).swapaxes(0, 1)
+    h_end, ys = jax.lax.scan(chunk_body, h0, (ch(dt), ch(bmat), ch(cmat), ch(xf32)))
+    y = ys.swapaxes(0, 1).reshape(b, main, di)
+    if rem:  # remainder chunk (seq not a multiple of the chunk length)
+        h_end, y_rem = chunk_body(
+            h_end, (dt[:, main:], bmat[:, main:], cmat[:, main:], xf32[:, main:])
+        )
+        y = jnp.concatenate([y, y_rem], axis=1)
+    y = y + params["D"] * xs.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ params["out_proj"]
+    return out, SSMState(h_end, new_tail)
+
+
+def mamba1_decode(params, cfg: ModelConfig, x, state: SSMState):
+    """Single-token recurrent step. x (B,1,D)."""
+    y, new_state = mamba1(params, cfg, x, state)
+    return y, new_state
+
+
+# --- mamba2 (SSD) ---------------------------------------------------------------
+
+def mamba2(params, cfg: ModelConfig, x, state: SSMState | None = None):
+    """Chunked SSD. x (B,S,D) -> (y, new_state)."""
+    s = cfg.ssm
+    b, seq, _ = x.shape
+    di, n, hd = d_inner(cfg), s.d_state, s.headdim
+    p = di // hd
+    proj = x @ params["in_proj"]  # (B,S, 2di+2n+P)
+    z, xbc, dt_raw = proj[..., :di], proj[..., di : di + di + 2 * n], proj[..., -p:]
+    tail = state.conv_tail if state is not None else None
+    xbc, new_tail = causal_conv(xbc, params["conv_w"], params["conv_b"], tail)
+    xs = xbc[..., :di]
+    bmat = xbc[..., di : di + n].astype(jnp.float32)  # (B,S,n)
+    cmat = xbc[..., di + n :].astype(jnp.float32)     # (B,S,n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,P)
+    a_head = -jnp.exp(params["A_log"])  # (P,)
+    dta = dt * a_head                   # (B,S,P) log-decay per step
+
+    q = min(s.chunk, seq)
+    n_chunks, rem = divmod(seq, q)
+    main = n_chunks * q
+    xh = xs.astype(jnp.float32).reshape(b, seq, p, hd)
+    h0 = state.h if state is not None else jnp.zeros((b, p, hd, n), jnp.float32)
+
+    def chunk_body(h, inp):
+        dt_q, dta_q, b_q, c_q, x_q = inp  # (B,Q,P) (B,Q,P) (B,Q,n) (B,Q,n) (B,Q,P,hd)
+        qq = dt_q.shape[1]
+        cum = jnp.cumsum(dta_q, axis=1)  # (B,Q,P)
+        # intra-chunk: Y_ij = C_i.B_j * exp(cum_i - cum_j) * dt_j  (i >= j)
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,Q,Q,P)
+        tri = jnp.tril(jnp.ones((qq, qq), bool))
+        cb = jnp.einsum("bin,bjn->bij", c_q, b_q)  # (B,Q,Q)
+        w = jnp.where(tri[None, :, :, None], cb[..., None] * decay, 0.0)  # (B,Q,Q,P)
+        y_intra = jnp.einsum("bijp,bjp,bjpe->bipe", w, dt_q, x_q)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bin,bpen,bip->bipe", c_q, h, jnp.exp(cum))
+        # state update: h' = exp(cum_Q) h + sum_j exp(cum_Q - cum_j) dt_j B_j x_j
+        end = cum[:, -1:, :]  # (B,1,P)
+        dec_j = jnp.exp(end - cum)  # (B,Q,P)
+        h_new = jnp.exp(end[:, 0, :])[:, :, None, None] * h + jnp.einsum(
+            "bjp,bjn,bjpe->bpen", dec_j * dt_q, b_q, x_q
+        )
+        return h_new, y_intra + y_inter
+
+    ch = lambda t: t[:, :main].reshape(b, n_chunks, q, *t.shape[2:]).swapaxes(0, 1)
+    h_end, ys = jax.lax.scan(chunk_body, h0, (ch(dt), ch(dta), ch(bmat), ch(cmat), ch(xh)))
+    y = ys.swapaxes(0, 1).reshape(b, main, di)
+    if rem:  # remainder chunk
+        h_end, y_rem = chunk_body(
+            h_end, (dt[:, main:], dta[:, main:], bmat[:, main:], cmat[:, main:], xh[:, main:])
+        )
+        y = jnp.concatenate([y, y_rem.reshape(b, rem, di)], axis=1)
+    y = y + (params["D"][:, None] * xh.reshape(b, seq, p, hd)).reshape(b, seq, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = layers.rms_norm(y.astype(x.dtype), params["norm"])
+    out = y @ params["out_proj"]
+    return out, SSMState(h_end, new_tail)
+
+
+def ssm_block(params, cfg: ModelConfig, x, state=None):
+    fn = mamba1 if cfg.ssm.kind == "mamba1" else mamba2
+    return fn(params, cfg, x, state)

@@ -1,0 +1,410 @@
+"""Block definitions and the scanned decoder stack.
+
+Architectures are expressed as *segments* — contiguous runs of one block kind
+whose stacked params scan with lax.scan (one trace per kind, so deepseek-v3's
+61 layers compile as two scans, not 61 inlined blocks):
+
+    dense LMs        [('attn_dense', n)]
+    deepseek-v2/v3   [('mla_dense', k), ('mla_moe', n-k)]
+    falcon-mamba     [('mamba1', n)]
+    zamba2           [('mamba2', n)] + a weight-shared attention block applied
+                     every `hybrid_attn_every` layers inside the scan
+    whisper          encoder [('enc_attn', n)] / decoder [('dec_attn', n)]
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, ffn, layers, moe, ssm
+from .config import ModelConfig
+
+
+# --- segment layout -------------------------------------------------------------
+
+def segments(cfg: ModelConfig) -> list[tuple[str, int]]:
+    if cfg.enc_dec:
+        return [("dec_attn", cfg.n_layers)]
+    if cfg.family == "ssm":
+        return [("mamba1" if cfg.ssm.kind == "mamba1" else "mamba2", cfg.n_layers)]
+    if cfg.family == "hybrid":
+        return [("mamba2" if cfg.ssm.kind == "mamba2" else "mamba1", cfg.n_layers)]
+    if cfg.moe is not None:
+        nd = cfg.moe.n_dense_layers
+        segs = []
+        if nd:
+            segs.append(("mla_dense" if cfg.mla else "attn_dense", nd))
+        segs.append(("mla_moe" if cfg.mla else "attn_moe", cfg.n_layers - nd))
+        return segs
+    return [("attn_dense", cfg.n_layers)]
+
+
+# --- per-block params -------------------------------------------------------------
+
+def _init_norm(cfg: ModelConfig, dtype):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), dtype), "bias": jnp.zeros((cfg.d_model,), dtype)}
+    return {"scale": jnp.ones((cfg.d_model,), dtype)}
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    if cfg.norm == "layernorm":
+        return layers.layer_norm(x, p["scale"], p["bias"])
+    return layers.rms_norm(x, p["scale"])
+
+
+def init_block(rng, cfg: ModelConfig, kind: str, dtype) -> dict:
+    ks = jax.random.split(rng, 4)
+    p: dict[str, Any] = {"ln1": _init_norm(cfg, dtype)}
+    if kind in ("mamba1", "mamba2"):
+        p["ssm"] = ssm.init_ssm(ks[0], cfg, dtype)
+        return p
+    if kind.startswith("mla"):
+        p["attn"] = attention.init_mla(ks[0], cfg, dtype)
+    else:
+        p["attn"] = attention.init_attention(ks[0], cfg, dtype)
+    p["ln2"] = _init_norm(cfg, dtype)
+    if kind.endswith("moe"):
+        p["moe"] = moe.init_moe(ks[1], cfg, dtype)
+    else:
+        d_ff = cfg.d_ff
+        if cfg.moe is not None and cfg.moe.dense_d_ff:
+            d_ff = cfg.moe.dense_d_ff  # deepseek leading dense layers are wider
+        p["ffn"] = ffn.init_ffn(ks[1], cfg.d_model, d_ff, cfg.act, dtype)
+    if kind == "dec_attn":  # whisper decoder: cross-attention sublayer
+        p["ln_x"] = _init_norm(cfg, dtype)
+        p["xattn"] = attention.init_attention(ks[2], cfg, dtype)
+    return p
+
+
+# --- per-block application ----------------------------------------------------------
+
+def apply_block(params, cfg: ModelConfig, kind: str, x, positions, mesh=None, encoder_out=None):
+    """Full-sequence (train / prefill) block application."""
+    h = apply_norm(cfg, params["ln1"], x)
+    if kind in ("mamba1", "mamba2"):
+        y, _ = ssm.ssm_block(params["ssm"], cfg, h)
+        return x + y
+    if kind.startswith("mla"):
+        y = attention.mla_attention(params["attn"], cfg, h, positions)
+    elif kind == "enc_attn":
+        y = attention.attention(params["attn"], cfg, h, positions, causal=False)
+    else:
+        y = attention.attention(params["attn"], cfg, h, positions)
+    x = x + y
+    if kind == "dec_attn" and encoder_out is not None:
+        h = apply_norm(cfg, params["ln_x"], x)
+        y = _cross_attention(params["xattn"], cfg, h, encoder_out)
+        x = x + y
+    h = apply_norm(cfg, params["ln2"], x)
+    if kind.endswith("moe"):
+        y = moe.moe_layer(params["moe"], h, cfg, mesh)
+    else:
+        d_ff_act = cfg.act
+        y = ffn.ffn(params["ffn"], h, d_ff_act)
+    return x + y
+
+
+def _cross_attention(params, cfg: ModelConfig, x, encoder_out):
+    """Decoder->encoder attention (no positional rotation, no causal mask)."""
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    k = jnp.einsum("bsd,dke->bske", encoder_out, params["wk"])
+    v = jnp.einsum("bsd,dke->bske", encoder_out, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    out = attention._sdpa(q, k, v, causal=False)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"])
+
+
+def apply_block_decode(params, cfg: ModelConfig, kind: str, x, cache, pos, mesh=None,
+                       encoder_out=None, rope_positions=None):
+    """One-token decode.  cache is the block's state pytree; returns (x, cache).
+    pos (B,1) is the cache slot; rope_positions may carry M-RoPE streams."""
+    h = apply_norm(cfg, params["ln1"], x)
+    if kind in ("mamba1", "mamba2"):
+        y, new_state = ssm.ssm_block(params["ssm"], cfg, h, cache)
+        return x + y, new_state
+    if kind.startswith("mla"):
+        y, cache_sa = attention.mla_decode_attention(params["attn"], cfg, h, cache["self"],
+                                                     pos, rope_positions)
+    else:
+        y, cache_sa = attention.decode_attention(params["attn"], cfg, h, cache["self"],
+                                                 pos, rope_positions)
+    x = x + y
+    new_cache = dict(cache)
+    new_cache["self"] = cache_sa
+    if kind == "dec_attn":
+        # cross-attention against cached encoder K/V (filled at prefill)
+        h = apply_norm(cfg, params["ln_x"], x)
+        y = _cross_attention_cached(params["xattn"], cfg, h, cache["cross"])
+        x = x + y
+    h = apply_norm(cfg, params["ln2"], x)
+    if kind.endswith("moe"):
+        y = moe.moe_layer(params["moe"], h, cfg, mesh)
+    else:
+        y = ffn.ffn(params["ffn"], h, cfg.act)
+    return x + y, new_cache
+
+
+def _cross_attention_cached(params, cfg: ModelConfig, x, cross_cache):
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+    out = attention._sdpa(q, cross_cache["k"], cross_cache["v"], causal=False)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"])
+
+
+def apply_block_prefill(params, cfg: ModelConfig, kind: str, x, positions, mesh=None,
+                        encoder_out=None, max_seq: int | None = None):
+    """Full-prompt pass that also emits the block's decode cache."""
+    h = apply_norm(cfg, params["ln1"], x)
+    if kind in ("mamba1", "mamba2"):
+        y, state = ssm.ssm_block(params["ssm"], cfg, h)
+        return x + y, state
+    if kind.startswith("mla"):
+        y, c_kv, k_rope = attention.mla_attention_with_cache(params["attn"], cfg, h, positions)
+        cache = {"self": {"c_kv": _pad_seq(c_kv, max_seq), "k_rope": _pad_seq(k_rope, max_seq)}}
+    else:
+        causal = kind != "enc_attn"
+        y, k, v = attention.attention_with_kv(params["attn"], cfg, h, positions, causal=causal)
+        cache = {"self": {"k": _pad_seq(k, max_seq), "v": _pad_seq(v, max_seq)}}
+    x = x + y
+    if kind == "dec_attn":
+        h = apply_norm(cfg, params["ln_x"], x)
+        xk = jnp.einsum("bsd,dke->bske", encoder_out, params["xattn"]["wk"])
+        xv = jnp.einsum("bsd,dke->bske", encoder_out, params["xattn"]["wv"])
+        if cfg.qkv_bias:
+            xk, xv = xk + params["xattn"]["bk"], xv + params["xattn"]["bv"]
+        cache["cross"] = {"k": xk, "v": xv}
+        y = attention._sdpa(
+            jnp.einsum("bsd,dhe->bshe", h, params["xattn"]["wq"])
+            + (params["xattn"]["bq"] if cfg.qkv_bias else 0),
+            xk, xv, causal=False,
+        )
+        x = x + jnp.einsum("bshe,hed->bsd", y, params["xattn"]["wo"])
+    h = apply_norm(cfg, params["ln2"], x)
+    if kind.endswith("moe"):
+        y = moe.moe_layer(params["moe"], h, cfg, mesh)
+    else:
+        y = ffn.ffn(params["ffn"], h, cfg.act)
+    return x + y, cache
+
+
+def _pad_seq(t, max_seq):
+    """Pad the sequence axis (axis 1) of a cache tensor up to max_seq."""
+    if max_seq is None or t.shape[1] == max_seq:
+        return t
+    pad = max_seq - t.shape[1]
+    return jnp.concatenate([t, jnp.zeros((t.shape[0], pad) + t.shape[2:], t.dtype)], axis=1)
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int, dtype):
+    if kind in ("mamba1", "mamba2"):
+        return ssm.init_ssm_state(cfg, batch, dtype)
+    if kind.startswith("mla"):
+        return {"self": attention.init_mla_cache(cfg, batch, max_seq, dtype)}
+    cache = {"self": attention.init_kv_cache(cfg, batch, max_seq, dtype)}
+    if kind == "dec_attn":
+        k, hd = cfg.n_kv_heads, cfg.hd
+        cache["cross"] = {
+            "k": jnp.zeros((batch, cfg.encoder_seq, k, hd), dtype),
+            "v": jnp.zeros((batch, cfg.encoder_seq, k, hd), dtype),
+        }
+    return cache
+
+
+# --- stacked segments ----------------------------------------------------------------
+
+def init_segment(rng, cfg: ModelConfig, kind: str, n: int, dtype):
+    """Stack n blocks' params along a leading layer axis (for lax.scan)."""
+    ks = jax.random.split(rng, n)
+    blocks = [init_block(k, cfg, kind, dtype) for k in ks]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+
+def _maybe_remat(f, cfg: ModelConfig):
+    return jax.checkpoint(f) if cfg.remat else f
+
+
+def _n_layers_of(params) -> int:
+    return jax.tree_util.tree_leaves(params)[0].shape[0]
+
+
+def _layer(params, i):
+    return jax.tree.map(lambda t: t[i], params)
+
+
+def apply_segment(params, cfg: ModelConfig, kind: str, x, positions, mesh=None,
+                  encoder_out=None, constrain=None):
+    """Scan a homogeneous stacked segment.  `constrain` (optional callable)
+    re-pins the carry's sharding every iteration — GSPMD propagation into
+    while bodies can otherwise degrade to replicated compute."""
+    keep = constrain or (lambda h: h)
+    fn = _maybe_remat(
+        lambda p, h_: apply_block(p, cfg, kind, h_, positions, mesh, encoder_out), cfg
+    )
+    if cfg.unroll_layers:
+        for i in range(_n_layers_of(params)):
+            x = keep(fn(_layer(params, i), x))
+        return x
+
+    def body(h, layer_params):
+        return keep(fn(layer_params, keep(h))), None
+
+    x, _ = jax.lax.scan(body, x, params)
+    return x
+
+
+def apply_segment_decode(params, cfg: ModelConfig, kind: str, x, caches, pos,
+                         mesh=None, encoder_out=None, rope_positions=None):
+    """Decode scan; caches are stacked along the layer axis too."""
+    if cfg.unroll_layers:
+        outs = []
+        for i in range(_n_layers_of(params)):
+            x, nc = apply_block_decode(_layer(params, i), cfg, kind, x, _layer(caches, i),
+                                       pos, mesh, encoder_out, rope_positions)
+            outs.append(nc)
+        return x, jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+    def body(h, inp):
+        layer_params, cache = inp
+        h, new_cache = apply_block_decode(layer_params, cfg, kind, h, cache, pos, mesh,
+                                          encoder_out, rope_positions)
+        return h, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params, caches))
+    return x, new_caches
+
+
+def apply_segment_prefill(params, cfg: ModelConfig, kind: str, x, positions,
+                          mesh=None, encoder_out=None, max_seq: int | None = None,
+                          constrain=None):
+    """Prefill scan: returns (x, stacked caches)."""
+    keep = constrain or (lambda h: h)
+    if cfg.unroll_layers:
+        outs = []
+        for i in range(_n_layers_of(params)):
+            x, cache = apply_block_prefill(_layer(params, i), cfg, kind, x, positions,
+                                           mesh, encoder_out, max_seq)
+            x = keep(x)
+            outs.append(cache)
+        return x, jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+    def body(h, layer_params):
+        h, cache = apply_block_prefill(layer_params, cfg, kind, keep(h), positions, mesh,
+                                       encoder_out, max_seq)
+        return keep(h), cache
+
+    x, caches = jax.lax.scan(body, x, params)
+    return x, caches
+
+
+def apply_hybrid_segment_prefill(params, cfg: ModelConfig, kind: str, x, positions,
+                                 shared_attn, mesh=None, max_seq: int | None = None):
+    every = cfg.hybrid_attn_every
+    grouped, tail, n_groups, rem = _hybrid_split(params, cfg.n_layers, every)
+
+    def group_body(h, group_params):
+        h, gc = apply_segment_prefill(group_params, cfg, kind, h, positions, mesh,
+                                      max_seq=max_seq)
+        h, sh_cache = apply_block_prefill(shared_attn, cfg, "attn_dense", h, positions,
+                                          mesh, max_seq=max_seq)
+        return h, (gc, sh_cache)
+
+    if cfg.unroll_layers:
+        outs = []
+        for g in range(n_groups):
+            x, out = group_body(x, _layer(grouped, g))
+            outs.append(out)
+        grouped_caches, shared_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        x, (grouped_caches, shared_caches) = jax.lax.scan(group_body, x, grouped)
+    if rem:
+        x, tail_caches = apply_segment_prefill(tail, cfg, kind, x, positions, mesh,
+                                               max_seq=max_seq)
+        flat = jax.tree.map(
+            lambda g, t: jnp.concatenate([g.reshape((-1,) + g.shape[2:]), t]),
+            grouped_caches, tail_caches,
+        )
+    else:
+        flat = jax.tree.map(lambda g: g.reshape((-1,) + g.shape[2:]), grouped_caches)
+    return x, flat, shared_caches
+
+
+# --- zamba2-style hybrid: mamba stack + weight-shared attention every k layers ---
+#
+# The shared block's WEIGHTS are reused at every application point (the
+# arch's parameter-saving trick) but each point has its own KV cache.  To keep
+# scans homogeneous, layers are processed in groups of `every`: an outer scan
+# over groups runs an inner scan of `every` ssm layers then one shared-attn
+# application.  Remainder layers (n % every) run in a final plain scan.
+
+def _hybrid_split(params_stacked, n: int, every: int):
+    n_groups, rem = divmod(n, every)
+    grouped = jax.tree.map(
+        lambda t: t[: n_groups * every].reshape((n_groups, every) + t.shape[1:]),
+        params_stacked,
+    )
+    tail = jax.tree.map(lambda t: t[n_groups * every :], params_stacked)
+    return grouped, tail, n_groups, rem
+
+
+def apply_hybrid_segment(params, cfg: ModelConfig, kind: str, x, positions,
+                         shared_attn, mesh=None, constrain=None):
+    every = cfg.hybrid_attn_every
+    grouped, tail, n_groups, rem = _hybrid_split(params, cfg.n_layers, every)
+    keep = constrain or (lambda h: h)
+
+    def group_body(h, group_params):
+        h = apply_segment(group_params, cfg, kind, h, positions, mesh, constrain=constrain)
+        fn = _maybe_remat(
+            lambda p, h_: apply_block(p, cfg, "attn_dense", h_, positions, mesh), cfg
+        )
+        return keep(fn(shared_attn, h)), None
+
+    if cfg.unroll_layers:
+        for g in range(n_groups):
+            x, _ = group_body(x, _layer(grouped, g))
+    else:
+        x, _ = jax.lax.scan(group_body, x, grouped)
+    if rem:
+        x = apply_segment(tail, cfg, kind, x, positions, mesh, constrain=constrain)
+    return x
+
+
+def apply_hybrid_segment_decode(params, cfg: ModelConfig, kind: str, x, caches, pos,
+                                shared_attn, shared_caches, mesh=None):
+    """shared_caches: stacked (n_groups, ...) KV caches for the shared block."""
+    every = cfg.hybrid_attn_every
+    grouped, tail, n_groups, rem = _hybrid_split(params, cfg.n_layers, every)
+    grouped_caches, tail_caches, _, _ = _hybrid_split(caches, cfg.n_layers, every)
+
+    def group_body(h, inp):
+        group_params, group_caches, sh_cache = inp
+        h, new_gc = apply_segment_decode(group_params, cfg, kind, h, group_caches, pos, mesh)
+        h, new_sh = apply_block_decode(shared_attn, cfg, "attn_dense", h, sh_cache, pos, mesh)
+        return h, (new_gc, new_sh)
+
+    if cfg.unroll_layers:
+        outs = []
+        for g in range(n_groups):
+            x, out = group_body(
+                x, (_layer(grouped, g), _layer(grouped_caches, g), _layer(shared_caches, g))
+            )
+            outs.append(out)
+        new_grouped, new_shared = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        x, (new_grouped, new_shared) = jax.lax.scan(
+            group_body, x, (grouped, grouped_caches, shared_caches)
+        )
+    if rem:
+        x, new_tail = apply_segment_decode(tail, cfg, kind, x, tail_caches, pos, mesh)
+    else:
+        new_tail = tail_caches
+    flat = jax.tree.map(
+        lambda g, t: jnp.concatenate([g.reshape((-1,) + g.shape[2:]), t]), new_grouped, new_tail
+    )
+    return x, flat, new_shared

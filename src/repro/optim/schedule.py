@@ -1,0 +1,27 @@
+"""Learning-rate schedules (pure functions of the int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int, floor: float = 0.0):
+    """Linear warmup to peak, cosine decay to floor."""
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = floor + (peak_lr - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+def exponential_decay(lr: float, decay_rate: float, decay_steps: int):
+    def fn(step):
+        return jnp.asarray(lr * decay_rate ** (jnp.asarray(step, jnp.float32) / decay_steps), jnp.float32)
+    return fn

@@ -1,0 +1,91 @@
+"""Explicit collectives: int8 error-feedback compressed gradient sync.
+
+The cross-pod gradient all-reduce is the only DCN hop in the production mesh
+(DESIGN.md §6).  `compressed_psum_mean` implements a quantized ring exchange:
+
+    1. residual-corrected gradient  g' = g + e        (error feedback)
+    2. per-leaf symmetric int8 quantization           (scale = max|g'|/127)
+    3. reduce-scatter via int8 all_to_all             (wire: S/4 vs f32)
+    4. local dequant-sum of the owned chunk
+    5. int8 all_gather of the reduced chunks          (wire: S/4)
+    6. new residual e = g' - dequant(quant(g'))
+
+Wire bytes: 2·(n-1)/n·S_int8 = ~4x less than an f32 ring all-reduce.  Error
+feedback keeps the bias bounded (the classic 1-bit-Adam/PowerSGD argument) —
+`tests/test_collectives.py` checks convergence against exact psum.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(g: jnp.ndarray):
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jnp.ndarray, scale: jnp.ndarray):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_mean(g: jnp.ndarray, err: jnp.ndarray, axis_name: str):
+    """Mean-psum of g over axis_name with int8 wire format + error feedback.
+
+    Must run inside shard_map/pmap over `axis_name`.  Returns (mean_g, new_err).
+    """
+    n = jax.lax.axis_size(axis_name)
+    orig_shape = g.shape
+    g = g.astype(jnp.float32) + err.astype(jnp.float32)
+
+    flat = g.reshape(-1)
+    pad = (-flat.shape[0]) % n
+    flat_p = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)]) if pad else flat
+
+    q, scale = _quantize(flat_p)
+    new_err = (flat_p - _dequantize(q, scale))[: flat.shape[0]].reshape(orig_shape)
+
+    # reduce-scatter: all_to_all my chunk-grid, each rank sums its own chunk
+    chunks = q.reshape(n, -1)  # (n, S/n) int8
+    recv = jax.lax.all_to_all(chunks, axis_name, split_axis=0, concat_axis=0, tiled=True)
+    scales = jax.lax.all_gather(scale, axis_name)  # (n,) f32 — negligible wire
+    local_sum = jnp.sum(
+        recv.reshape(n, -1).astype(jnp.float32) * scales[:, None], axis=0
+    )  # (S/n,)
+
+    # re-quantize the reduced chunk, all-gather int8
+    q2, scale2 = _quantize(local_sum)
+    gq = jax.lax.all_gather(q2, axis_name)            # (n, S/n) int8
+    gs = jax.lax.all_gather(scale2, axis_name)        # (n,)
+    summed = (gq.astype(jnp.float32) * gs[:, None]).reshape(-1)[: flat.shape[0]]
+    return (summed / n).reshape(orig_shape), new_err
+
+
+def compressed_grad_sync(grads: Any, err_state: Any, mesh, axis_name: str = "pod"):
+    """Tree-wise compressed sync over one mesh axis (the DCN 'pod' hop).
+
+    grads must already be consistent within the other axes (pjit handles the
+    intra-pod reduction); this wraps only the cross-pod mean.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def mapped(g, e):
+        return jax.shard_map(
+            lambda gg, ee: compressed_psum_mean(gg, ee, axis_name),
+            mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()), check_vma=False,
+        )(g, e)
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(err_state)
+    outs = [mapped(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = treedef.unflatten([o[0] for o in outs])
+    new_e = treedef.unflatten([o[1] for o in outs])
+    return new_g, new_e
+
+
+def init_error_state(params: Any):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,263 @@
+"""Partition rules: params / batches / caches -> PartitionSpec trees.
+
+Axes: ('pod',) 'data', 'model'.  Policy:
+  * TP over 'model' — attention heads, FFN hidden, vocab, SSM inner channels,
+    MoE experts (EP; matches the shard_map specs inside models.moe).
+  * FSDP over 'data' for large archs — the largest remaining dim of each
+    big 2+-D leaf is sharded over 'data'; XLA all-gathers per scanned layer.
+  * DP over ('pod','data') for the batch; 'pod' composes with 'data' so the
+    cross-pod hop is only the gradient all-reduce.
+
+Rules match on the param path (string fragments) + leaf rank, so they survive
+arbitrary nesting (scanned segments add a leading layer axis).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    """Two families (EXPERIMENTS.md §Perf):
+
+    * TP policy (tp=True): Megatron-style — heads/ffn/vocab over 'model',
+      batch over ('pod','data'), optional FSDP over 'data'.  Best for decode
+      (params+cache sharded at tiny per-step compute).
+    * FSDP-pure policy (tp=False, fsdp=True): ZeRO-3 — batch over
+      ('data','model') [+'pod' as an extra param shard], every large param
+      dim sharded over the widest divisible axis combo.  Beats TP for
+      train/prefill at large token counts: per-layer param all-gathers cost
+      ~3x params/device/step, while TP pays ~2 activation all-reduces per
+      layer per pass (tokens x d_model each) — 10-20x more at batch 256x4k.
+    """
+    tp: bool = True
+    fsdp: bool = False
+    dp_axes: tuple = ("pod", "data")           # batch-sharding axes
+    fsdp_axes: tuple = ("data",)               # param-sharding axes (widest first)
+    model_axis: str = "model"
+
+
+# the optimized train/prefill policy (see EXPERIMENTS.md §Perf iteration 1-2)
+FSDP_PURE = ShardingPolicy(
+    tp=False, fsdp=True,
+    dp_axes=("pod", "data", "model"),   # batch greedily, spill to seq
+    fsdp_axes=("pod", "data", "model"),
+)
+
+
+def dp(mesh, policy: ShardingPolicy):
+    return tuple(a for a in policy.dp_axes if a in mesh.shape)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def _divisible(shape, axis, n) -> bool:
+    return n > 0 and shape[axis] % n == 0 and shape[axis] >= n
+
+
+# name-fragment -> (axis-from-the-right to shard over 'model')
+# (negative index into the shape tuple; layer stacking prepends dims so
+# counting from the right is stable)
+_MODEL_AXIS_RULES = [
+    ("attn/wq_b", -2), ("attn/wkv_b", -2),          # MLA head dims
+    ("attn/wq_a", None), ("attn/wkv_a", None),
+    ("attn/q_a_norm", None), ("attn/kv_a_norm", None),
+    ("attn/wq", -2), ("attn/wk", -2), ("attn/wv", -2), ("attn/wo", -3),
+    ("attn/bq", -2), ("attn/bk", -2), ("attn/bv", -2),
+    ("attn/q_norm", None), ("attn/k_norm", None),
+    ("xattn/wq", -2), ("xattn/wk", -2), ("xattn/wv", -2), ("xattn/wo", -3),
+    ("xattn/bq", -2), ("xattn/bk", -2), ("xattn/bv", -2),
+    ("moe/router", None), ("moe/router_bias", None),
+    ("moe/w_gate", -3), ("moe/w_up", -3), ("moe/w_down", -3),  # expert axis (EP)
+    ("shared/w_gate", -1), ("shared/w_up", -1), ("shared/w_down", -2),
+    ("ffn/w_gate", -1), ("ffn/w_up", -1), ("ffn/w_down", -2),
+    ("ffn/b_up", -1), ("ffn/b_down", None),
+    ("ssm/in_proj", -1), ("ssm/conv_w", -1), ("ssm/conv_b", -1),
+    ("ssm/x_proj", -2), ("ssm/dt_proj", -1), ("ssm/dt_bias", -1),
+    ("ssm/A_log", None), ("ssm/D", None), ("ssm/norm", -1),
+    ("ssm/out_proj", -2),
+    ("mtp/proj", -1),
+    ("embed", -2), ("lm_head", -1),
+]
+# ssm A_log/D are per-channel ((di, n) / (P,)); sharding them must follow
+# in_proj's channel split — handled dynamically below for mamba2 head-count
+# divisibility; mamba1's (di, n) shards di at axis -2.
+_SSM_CHANNEL_RULES = {"ssm/A_log": True, "ssm/D": True}
+
+
+def _expert_axes(cfg, mesh):
+    if cfg.moe is None or cfg.moe.ep_axis is None:
+        return None
+    axes = cfg.moe.ep_axes if hasattr(cfg.moe, "ep_axes") else (cfg.moe.ep_axis,)
+    axes = tuple(a for a in axes if a in mesh.shape)
+    return axes or None
+
+
+def param_specs(cfg: ModelConfig, abstract_params, mesh, policy: ShardingPolicy):
+    """PartitionSpec tree matching the params pytree."""
+    n_model = mesh.shape.get(policy.model_axis, 1)
+    ep_axes = _expert_axes(cfg, mesh)
+    n_ep = int(np.prod([mesh.shape[a] for a in ep_axes])) if ep_axes else 1
+
+    # fsdp axis combos, widest first: e.g. ('pod','data','model') -> also try
+    # ('data','model'), ('data',), ('model',)
+    fsdp_avail = tuple(a for a in policy.fsdp_axes if a in mesh.shape)
+    fsdp_combos = []
+    for k in range(len(fsdp_avail), 0, -1):
+        combo = fsdp_avail[-k:]
+        fsdp_combos.append(combo)
+    seen = set()
+    fsdp_combos = [c for c in fsdp_combos if not (c in seen or seen.add(c))]
+
+    def spec_for(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        rank = len(shape)
+        spec = [None] * rank
+
+        # MoE expert leaves: always EP-shard the expert axis (independent of
+        # the tp flag — matches the shard_map specs in models.moe)
+        is_expert = any(f"moe/{w}" in name for w in ("w_gate", "w_up", "w_down"))
+        if is_expert and ep_axes and _divisible(shape, -3, n_ep):
+            spec[rank - 3] = ep_axes if len(ep_axes) > 1 else ep_axes[0]
+
+        # Embedding / LM head: shard ONLY the vocab dim (over the widest
+        # dividing axis combo).  Generic FSDP must never shard their d_model
+        # dim: a contraction-dim shard turns the logits matmul into a
+        # (tokens x vocab) psum — catastrophic (§Perf iteration 2 post-mortem).
+        if name.endswith("embed") or name.endswith("lm_head"):
+            v_ax = -2 if name.endswith("embed") else -1
+            if policy.tp:
+                combos_v = [(policy.model_axis,)] + fsdp_combos
+            else:
+                combos_v = fsdp_combos + [(policy.model_axis,)]
+            for combo in combos_v:
+                n_c = int(np.prod([mesh.shape.get(a, 1) for a in combo]))
+                if _divisible(shape, v_ax, n_c):
+                    spec[rank + v_ax] = combo if len(combo) > 1 else combo[0]
+                    break
+            return P(*spec)
+
+        if policy.tp and n_model > 1 and not is_expert:
+            hit = None
+            for frag, ax in _MODEL_AXIS_RULES:
+                if frag in name:
+                    hit = ax
+                    break
+            if name.endswith("ssm/A_log") or name.endswith("ssm/D") or "ssm/dt_bias" in name:
+                # per-channel vectors: (di,·)/(P,) — shard the channel dim
+                ax = -2 if (name.endswith("A_log") and rank >= 2) else -1
+                hit = ax
+            if hit is not None and _divisible(shape, hit, n_model):
+                spec[rank + hit] = policy.model_axis
+
+        if policy.fsdp and rank >= 2 and int(np.prod(shape)) >= 1 << 16:
+            # shard the largest remaining dim over the widest divisible combo
+            for combo in fsdp_combos:
+                taken = {a for s in spec if s for a in (s if isinstance(s, tuple) else (s,))}
+                if any(a in taken for a in combo):
+                    continue
+                n_c = int(np.prod([mesh.shape[a] for a in combo]))
+                cands = [i for i in range(rank)
+                         if spec[i] is None and shape[i] % n_c == 0 and shape[i] >= n_c]
+                if cands:
+                    best = max(cands, key=lambda i: shape[i])
+                    spec[best] = combo if len(combo) > 1 else combo[0]
+                    break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for, abstract_params)
+
+
+def _split_batch_seq(b_size: int, s_size: int, axes: tuple, mesh):
+    """Greedy (batch-axes, seq-axes) split: the largest prefix of `axes`
+    whose product divides the batch shards the batch; remaining axes shard
+    the sequence if divisible (FSDP-pure prefill: B=32 over 'data', S over
+    'model')."""
+    for k in range(len(axes), -1, -1):
+        ax_b = axes[:k]
+        n_b = int(np.prod([mesh.shape[a] for a in ax_b])) if ax_b else 1
+        if b_size % n_b == 0:
+            rest = axes[k:]
+            n_s = int(np.prod([mesh.shape[a] for a in rest])) if rest else 1
+            ax_s = rest if (rest and s_size % n_s == 0) else ()
+            return (ax_b or None), (ax_s or None)
+    return None, None
+
+
+def batch_specs(cfg: ModelConfig, batch, mesh, policy: ShardingPolicy):
+    """PartitionSpec tree for a train/prefill/decode batch dict."""
+    dpa = dp(mesh, policy)
+    n_model = mesh.shape.get(policy.model_axis, 1)
+    n_dp = int(np.prod([mesh.shape[a] for a in dpa])) if dpa else 1
+
+    def spec_for(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        if "caches" in name:
+            return _cache_spec(name, shape, dpa, n_model, n_dp, policy)
+        if name.endswith("positions") and len(shape) == 3:  # (3, B, S) mrope
+            ax_b, ax_s = _split_batch_seq(shape[1], shape[2], dpa, mesh)
+            return P(None, ax_b, ax_s)
+        if (name.endswith("tokens") or "embeds" in name or "encoder_out" in name) \
+                and len(shape) >= 2:
+            ax_b, ax_s = _split_batch_seq(shape[0], shape[1], dpa, mesh)
+            return P(ax_b, ax_s, *([None] * (len(shape) - 2)))
+        if name.endswith("tokens") or name.endswith("pos"):
+            ax_b, _ = _split_batch_seq(shape[0], 1, dpa, mesh)
+            return P(ax_b, *([None] * (len(shape) - 1)))
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch)
+
+
+def _cache_spec(name, shape, dpa, n_model, n_dp, policy: ShardingPolicy):
+    """Decode-cache leaves.  Layer-stacked: leading dim = layer.
+
+    kv cache  (L, B, S, K, hd): B->dp if divisible; K->model if divisible,
+              else S->model (flash-decode style sequence sharding).
+    mla cache (L, B, S, lora):  B->dp, S->model.
+    ssm state (L, B, ...channels): B->dp, biggest channel dim -> model.
+    """
+    rank = len(shape)
+    spec = [None] * rank
+    m = policy.model_axis
+    if rank >= 2 and dpa and shape[1] % max(n_dp, 1) == 0:
+        spec[1] = dpa
+    batch_unsharded = spec[1] is None
+    if rank == 5:  # (L, B, S, K, hd)
+        if shape[3] % n_model == 0 and n_model > 1:
+            spec[3] = m
+        elif shape[2] % n_model == 0:
+            spec[2] = m
+        if batch_unsharded and dpa and spec[2] is None and shape[2] % max(n_dp, 1) == 0:
+            spec[2] = dpa  # long-context batch=1: shard seq over data too
+    elif rank == 4 and ("c_kv" in name or "k_rope" in name):
+        if shape[2] % n_model == 0 and n_model > 1:
+            spec[2] = m
+        if batch_unsharded and dpa and shape[2] % max(n_dp, 1) == 0 and spec[2] == m:
+            pass
+    elif rank >= 3:  # ssm states / conv tails: shard biggest trailing dim
+        cands = [i for i in range(2, rank) if shape[i] % n_model == 0 and shape[i] >= n_model]
+        if cands and n_model > 1:
+            spec[max(cands, key=lambda i: shape[i])] = m
+    return P(*spec)
+
+
+def to_named(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def activation_spec(mesh, policy: ShardingPolicy):
+    """(B, S, D) activations: batch over dp, rest replicated."""
+    return P(dp(mesh, policy), None, None)

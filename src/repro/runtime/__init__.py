@@ -1,0 +1,1 @@
+from .driver import TrainDriver, DriverConfig, StragglerStats, resume_or_init  # noqa: F401

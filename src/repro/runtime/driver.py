@@ -1,0 +1,128 @@
+"""Fault-tolerant training driver.
+
+Features (DESIGN.md §6):
+  * periodic + final checkpointing through CheckpointManager (atomic, async)
+  * preemption safety: SIGTERM/SIGINT triggers checkpoint-then-clean-exit
+  * --auto-resume: restores the latest valid checkpoint, including the data
+    cursor (deterministic streams restart exactly)
+  * straggler watchdog: per-step wall time EWMA + deviation; steps slower
+    than `ewma + straggler_sigma * dev` are flagged and counted — on a real
+    fleet this hook triggers re-slicing; here it logs and records
+  * metrics JSONL for offline analysis
+"""
+from __future__ import annotations
+
+import json
+import signal
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Iterator
+
+from ..checkpoint.manager import CheckpointManager
+
+
+@dataclass
+class DriverConfig:
+    total_steps: int = 1000
+    checkpoint_every: int = 200
+    log_every: int = 20
+    straggler_sigma: float = 4.0
+    ewma_alpha: float = 0.05
+    metrics_path: str | None = None
+
+
+@dataclass
+class StragglerStats:
+    ewma: float = 0.0
+    dev: float = 0.0
+    n_flagged: int = 0
+    initialized: bool = False
+
+    def update(self, dt: float, sigma: float, alpha: float) -> bool:
+        if not self.initialized:
+            self.ewma, self.dev, self.initialized = dt, dt * 0.1, True
+            return False
+        flagged = dt > self.ewma + sigma * max(self.dev, 1e-9)
+        self.dev = (1 - alpha) * self.dev + alpha * abs(dt - self.ewma)
+        self.ewma = (1 - alpha) * self.ewma + alpha * dt
+        if flagged:
+            self.n_flagged += 1
+        return flagged
+
+
+class TrainDriver:
+    def __init__(self, cfg: DriverConfig, ckpt: CheckpointManager):
+        self.cfg = cfg
+        self.ckpt = ckpt
+        self.straggler = StragglerStats()
+        self._preempted = False
+        self._metrics_f = open(cfg.metrics_path, "a") if cfg.metrics_path else None
+
+    def _install_signals(self):
+        def handler(signum, frame):
+            self._preempted = True
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                signal.signal(sig, handler)
+            except ValueError:
+                pass  # not main thread (tests)
+
+    def _log(self, record: dict):
+        if self._metrics_f:
+            self._metrics_f.write(json.dumps(record) + "\n")
+            self._metrics_f.flush()
+
+    def run(
+        self,
+        state: Any,
+        step_fn: Callable[[Any, Any], tuple[Any, dict]],
+        batch_iter: Iterator,
+        start_step: int = 0,
+        state_for_ckpt: Callable[[Any], Any] | None = None,
+    ):
+        """Generic loop: state, batch -> (state, metrics).  Returns (state, summary)."""
+        cfg = self.cfg
+        self._install_signals()
+        to_ckpt = state_for_ckpt or (lambda s: s)
+        step = start_step
+        flagged_steps = []
+
+        while step < cfg.total_steps:
+            batch = next(batch_iter)
+            t0 = time.perf_counter()
+            state, metrics = step_fn(state, batch)
+            dt = time.perf_counter() - t0
+            step += 1
+
+            if self.straggler.update(dt, cfg.straggler_sigma, cfg.ewma_alpha):
+                flagged_steps.append(step)
+                self._log({"event": "straggler", "step": step, "dt": dt,
+                           "ewma": self.straggler.ewma})
+
+            if step % cfg.log_every == 0:
+                self._log({"event": "train", "step": step, "dt": dt, **metrics})
+
+            if step % cfg.checkpoint_every == 0:
+                self.ckpt.save(step, to_ckpt(state), extra={"data_cursor": step})
+
+            if self._preempted:
+                self.ckpt.save(step, to_ckpt(state), extra={"data_cursor": step,
+                                                            "preempted": True}, block=True)
+                self._log({"event": "preempt_exit", "step": step})
+                return state, {"step": step, "preempted": True,
+                               "stragglers": flagged_steps}
+
+        self.ckpt.save(step, to_ckpt(state), extra={"data_cursor": step}, block=True)
+        self.ckpt.wait()
+        return state, {"step": step, "preempted": False, "stragglers": flagged_steps}
+
+
+def resume_or_init(ckpt: CheckpointManager, template: Any, init_fn: Callable[[], Any],
+                   shardings=None):
+    """--auto-resume entry: latest valid checkpoint or fresh init."""
+    try:
+        state, meta = ckpt.restore(template, shardings=shardings)
+        return state, int(meta.get("data_cursor", meta["step"]))
+    except FileNotFoundError:
+        return init_fn(), 0

@@ -1,0 +1,112 @@
+"""Per-arch reduced-config smoke tests: one forward/train step on CPU,
+asserting output shapes + no NaNs (assignment deliverable f)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import list_archs, get_smoke_config, get_config
+from repro.configs.shapes import SHAPES, applicable
+from repro.models.lm import LM
+
+
+def _batch(cfg, rng, b=2, s=16):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)}
+    if cfg.frontend == "vision_stub":
+        batch["embeds"] = jnp.asarray(rng.normal(size=(b, s, cfg.d_model)), jnp.float32)
+        batch["positions"] = jnp.tile(jnp.arange(s, dtype=jnp.int32)[None, None], (3, b, 1))
+    if cfg.frontend == "audio_stub":
+        batch["encoder_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_and_grad(arch, rng):
+    cfg = get_smoke_config(arch)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, rng)
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert np.isfinite(float(loss)), arch
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_prefill_decode_consistency(arch, rng):
+    """Greedy logits from (prefill then one decode) must match teacher-forced
+    forward at the same position — the KV-cache correctness invariant."""
+    cfg = get_smoke_config(arch)
+    if cfg.frontend == "vision_stub":
+        pytest.skip("vlm decode starts from text tokens; covered in test below")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 2, 8
+    toks = jnp.asarray(rng.integers(1, cfg.vocab, (b, s + 1)), jnp.int32)
+    enc = None
+    kw = {}
+    if cfg.frontend == "audio_stub":
+        kw["encoder_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+    # teacher-forced logits at position s-1 (predicting token s)
+    logits_full, _ = model.forward(params, tokens=toks, **kw)
+    want = logits_full[:, s - 1]
+    # prefill s tokens, then compare decode at position s-1... decode writes
+    # position s's token; instead compare prefill's last-position logits
+    logits_pre, caches, enc_out = model.prefill(params, tokens=toks[:, :s], max_seq=s + 4, **kw)
+    np.testing.assert_allclose(np.asarray(logits_pre), np.asarray(want), atol=2e-2, rtol=2e-2)
+    # one decode step at position s must match teacher-forced position s
+    logits_dec, _ = model.decode_step(
+        params, caches, toks[:, s : s + 1], jnp.full((b, 1), s, jnp.int32),
+        encoder_out=enc_out,
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits_dec), np.asarray(logits_full[:, s]), atol=2e-2, rtol=2e-2)
+
+
+def test_vlm_decode_runs(rng):
+    cfg = get_smoke_config("qwen2-vl-2b")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 2, 8
+    caches = model.init_caches(b, s + 4)
+    logits, caches = model.decode_step(
+        params, caches,
+        jnp.asarray(rng.integers(0, cfg.vocab, (b, 1)), jnp.int32),
+        jnp.zeros((b, 1), jnp.int32),
+    )
+    assert logits.shape == (b, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_full_configs_match_assignment():
+    """The full (non-smoke) configs carry the assigned hyperparameters."""
+    spec = {
+        "qwen1_5-0_5b": dict(n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16, d_ff=2816, vocab=151936),
+        "qwen3-8b": dict(n_layers=36, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=12288, vocab=151936),
+        "yi-9b": dict(n_layers=48, d_model=4096, n_heads=32, n_kv_heads=4, d_ff=11008, vocab=64000),
+        "chatglm3-6b": dict(n_layers=28, d_model=4096, n_heads=32, n_kv_heads=2, d_ff=13696, vocab=65024),
+        "deepseek-v2-lite-16b": dict(n_layers=27, d_model=2048, n_heads=16, vocab=102400),
+        "deepseek-v3-671b": dict(n_layers=61, d_model=7168, n_heads=128, vocab=129280),
+        "whisper-medium": dict(n_layers=24, d_model=1024, n_heads=16, d_ff=4096, vocab=51865),
+        "qwen2-vl-2b": dict(n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2, d_ff=8960, vocab=151936),
+        "zamba2-7b": dict(n_layers=81, d_model=3584, n_heads=32, d_ff=14336, vocab=32000),
+        "falcon-mamba-7b": dict(n_layers=64, d_model=4096, vocab=65024),
+    }
+    for arch, fields in spec.items():
+        cfg = get_config(arch)
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+    assert get_config("deepseek-v2-lite-16b").moe.n_routed == 64
+    assert get_config("deepseek-v2-lite-16b").moe.top_k == 6
+    assert get_config("deepseek-v3-671b").moe.n_routed == 256
+    assert get_config("deepseek-v3-671b").moe.top_k == 8
+    assert get_config("deepseek-v3-671b").mla.kv_lora == 512
+    assert get_config("zamba2-7b").ssm.d_state == 64
+    assert get_config("falcon-mamba-7b").ssm.d_state == 16
+
+
+def test_long_context_applicability():
+    runs = [a for a in list_archs() if applicable(get_config(a), "long_500k")[0]]
+    assert sorted(runs) == ["falcon-mamba-7b", "zamba2-7b"]

@@ -1,0 +1,99 @@
+"""NeRF core: field, occupancy, trainer semantics (update frequencies), e2e fit."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Field, FieldConfig, Instant3DTrainer, TrainerConfig, occupancy
+from repro.core.rendering import RenderConfig, sample_ts, render_rays
+from repro.core.trainer import _branch_update
+from repro.data import build_dataset, RaySampler
+
+SMALL_FIELD = FieldConfig(n_levels=4, max_resolution=64, log2_table_density=12,
+                          log2_table_color=10)
+
+
+def test_field_shapes(rng):
+    field = Field(SMALL_FIELD)
+    params = field.init(jax.random.PRNGKey(0))
+    assert params["density_grid"].shape == (4, 1 << 12, 2)
+    assert params["color_grid"].shape == (4, 1 << 10, 2)  # S_D > S_C (paper §3.2)
+    pts = jnp.asarray(rng.uniform(0, 1, (100, 3)).astype(np.float32))
+    dirs = jnp.asarray(rng.normal(size=(100, 3)).astype(np.float32))
+    dirs = dirs / jnp.linalg.norm(dirs, axis=-1, keepdims=True)
+    sigma, rgb = field.query(params, pts, dirs)
+    assert sigma.shape == (100,) and rgb.shape == (100, 3)
+    assert (np.asarray(sigma) >= 0).all()
+    assert ((np.asarray(rgb) >= 0) & (np.asarray(rgb) <= 1)).all()
+
+
+def test_ngp_baseline_field(rng):
+    """decomposed=False is the Instant-NGP baseline (single grid)."""
+    cfg = FieldConfig(n_levels=4, max_resolution=64, log2_table_density=12,
+                      decomposed=False)
+    field = Field(cfg)
+    params = field.init(jax.random.PRNGKey(0))
+    assert "color_grid" not in params
+    pts = jnp.asarray(rng.uniform(0, 1, (50, 3)).astype(np.float32))
+    dirs = jnp.ones((50, 3)) / np.sqrt(3)
+    sigma, rgb = field.query(params, pts, dirs)
+    assert sigma.shape == (50,)
+
+
+def test_update_frequency_schedule():
+    """F_D:F_C = 1:0.5 -> color updates on every 2nd iteration (paper §5.1)."""
+    updates = [_branch_update(i, 0.5) for i in range(8)]
+    assert sum(updates) == 4
+    assert all(_branch_update(i, 1.0) for i in range(8))
+    third = [_branch_update(i, 1 / 3) for i in range(9)]
+    assert sum(third) == 3
+
+
+def test_freeze_step_keeps_color_grid_fixed(rng):
+    scene, ds = build_dataset(seed=1, n_views=3, h=16, w=16,
+                              cfg=RenderConfig(n_samples=8), gt_samples=16)
+    field = Field(SMALL_FIELD)
+    tcfg = TrainerConfig(n_rays=64, render=RenderConfig(n_samples=8), use_occupancy=False)
+    tr = Instant3DTrainer(field, tcfg)
+    state = tr.init(jax.random.PRNGKey(0))
+    sampler = RaySampler(ds)
+    batch = sampler.sample(jax.random.PRNGKey(1), 64)
+    ts = sample_ts(jax.random.PRNGKey(2), 64, tcfg.render)
+    occ = occupancy.init_state(tcfg.occ).density_ema
+
+    step = tr.step_fn(freeze_color=True)
+    # snapshot BEFORE the call: the step donates params/opt buffers
+    before_color = np.asarray(state.params["color_grid"]).copy()
+    before_density = np.asarray(state.params["density_grid"]).copy()
+    params, opt_state, loss, _ = step(state.params, state.opt_state, batch, ts, occ)
+    np.testing.assert_array_equal(np.asarray(params["color_grid"]), before_color)
+    # density grid must have moved
+    assert not np.array_equal(np.asarray(params["density_grid"]), before_density)
+
+
+def test_e2e_reconstruction_quality():
+    """Short CPU training must reach a sane PSNR on a procedural scene."""
+    rcfg = RenderConfig(n_samples=24)
+    scene, ds = build_dataset(seed=0, n_views=8, h=32, w=32, cfg=rcfg, gt_samples=96)
+    field = Field(FieldConfig(n_levels=6, max_resolution=96, log2_table_density=13,
+                              log2_table_color=11))
+    tcfg = TrainerConfig(n_rays=512, iters=120, render=rcfg,
+                         occ=occupancy.OccupancyConfig(update_interval=16, warmup_steps=32))
+    tr = Instant3DTrainer(field, tcfg)
+    state = tr.init(jax.random.PRNGKey(0))
+    state, hist = tr.train(state, RaySampler(ds), log_every=60)
+    ev = tr.evaluate(state.params, ds, views=[0])
+    assert ev["psnr_rgb"] > 20.0, ev
+    assert hist["loss"][-1] < hist["loss"][0]
+
+
+def test_occupancy_grid_culls_empty_space(rng):
+    field = Field(SMALL_FIELD)
+    params = field.init(jax.random.PRNGKey(0))
+    ocfg = occupancy.OccupancyConfig(resolution=8, density_threshold=1e9)  # cull all
+    state = occupancy.init_state(ocfg)
+    state = occupancy.update(field, params, state, ocfg, jax.random.PRNGKey(1))
+    mask = occupancy.occupied_mask_fn(state, ocfg)
+    pts = jnp.asarray(rng.uniform(0, 1, (64, 3)).astype(np.float32))
+    assert not np.asarray(mask(pts)).any()
+    assert float(occupancy.occupancy_fraction(state, ocfg)) == 0.0
