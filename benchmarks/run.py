@@ -18,6 +18,7 @@ SUITES = [
     ("table1_grid_sizes", "bench_grid_sizes"),
     ("table2_update_freq", "bench_update_freq"),
     ("table4_algo", "bench_algo"),
+    ("pipeline_compaction", "bench_pipeline"),
     ("fig8_10_access_patterns", "bench_access_patterns"),
     ("fig16_18_kernels", "bench_kernels"),
 ]

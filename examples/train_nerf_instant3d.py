@@ -14,6 +14,7 @@ import time
 import jax
 import numpy as np
 
+from repro import kernels
 from repro.checkpoint import CheckpointManager
 from repro.core import Field, FieldConfig, Instant3DTrainer, TrainerConfig, occupancy
 from repro.core.rendering import RenderConfig
@@ -30,7 +31,16 @@ def main():
     ap.add_argument("--auto-resume", action="store_true")
     ap.add_argument("--sd-sc", default="1:0.25", help="grid size ratio S_D:S_C")
     ap.add_argument("--fd-fc", default="1:0.5", help="update freq ratio F_D:F_C")
+    ap.add_argument("--backend", default=None,
+                    help="kernel backend: auto | ref | pallas | pallas-interpret | "
+                         "pallas-tpu (default: $REPRO_BACKEND, else auto)")
+    ap.add_argument("--no-compact", action="store_true",
+                    help="disable occupancy-compacted field queries (dense path)")
     args = ap.parse_args()
+
+    # explicit flag wins; otherwise the registry default ($REPRO_BACKEND / auto)
+    be = kernels.set_backend(args.backend) if args.backend else kernels.get_backend()
+    print(f"kernel backend: {be.name} (available: {', '.join(kernels.available_backends())})")
 
     render = RenderConfig(n_samples=24)
     scene, ds = build_dataset(seed=args.scene_seed, n_views=12, h=48, w=48,
@@ -45,6 +55,7 @@ def main():
     trainer = Instant3DTrainer(field, TrainerConfig(
         n_rays=768, iters=args.iters, f_color=fc, render=render,
         occ=occupancy.OccupancyConfig(update_interval=16, warmup_steps=32),
+        compact=not args.no_compact,
     ))
 
     ckpt = CheckpointManager(args.ckpt_dir, keep_last=2)
@@ -52,12 +63,21 @@ def main():
     start = 0
     if args.auto_resume and ckpt.latest_step() is not None:
         tmpl = {"params": state.params, "opt": state.opt_state,
-                "occ": state.occ_state.density_ema}
-        restored, meta = ckpt.restore(tmpl)
+                "occ": state.occ_state.density_ema,
+                "occ_step": state.occ_state.step}
+        try:
+            restored, meta = ckpt.restore(tmpl)
+            occ_step = jax.numpy.asarray(restored["occ_step"], jax.numpy.int32)
+        except KeyError:  # checkpoint predates the occ_step leaf
+            del tmpl["occ_step"]
+            restored, meta = ckpt.restore(tmpl)
+            occ_step = jax.numpy.zeros((), jax.numpy.int32)
+        # occ_step matters on resume: the trainer keeps rendering dense until
+        # the occupancy EMA has folded at least one real update
         state = state._replace(
             params=restored["params"], opt_state=restored["opt"],
             occ_state=occupancy.OccupancyState(
-                jax.numpy.asarray(restored["occ"]), jax.numpy.zeros((), jax.numpy.int32)),
+                jax.numpy.asarray(restored["occ"]), occ_step),
             step=int(meta["step"]),
         )
         start = int(meta["step"])
@@ -74,7 +94,8 @@ def main():
             print(f"[straggler] step time {dt:.3f}s vs ewma {watchdog.ewma:.3f}s")
         done += chunk
         ckpt.save(done, {"params": state.params, "opt": state.opt_state,
-                         "occ": state.occ_state.density_ema})
+                         "occ": state.occ_state.density_ema,
+                         "occ_step": state.occ_state.step})
         print(f"step {done:5d}  loss {hist['loss'][-1]:.5f}  ({dt:.3f}s/iter)  ckpt saved")
 
     ckpt.wait()

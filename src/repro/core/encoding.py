@@ -23,7 +23,6 @@ class HashGridConfig:
     log2_table_size: int = 19       # T = 2^19 (Instant-NGP default)
     base_resolution: int = 16
     max_resolution: int = 2048
-    backend: str = "ref"            # 'ref' | 'pallas'
     merged_backward: bool = True    # BUM merge in the VJP (paper §4.5 analogue)
 
     @property
@@ -44,11 +43,11 @@ class HashEncoding:
             cfg.n_levels, cfg.base_resolution, cfg.max_resolution
         )
         self.dense_flags = he_ref.level_is_dense(self.resolutions, cfg.table_size)
+        # kernel routing resolves through the repro.kernels registry default
         self._encode = he_ops.make_hash_encode(
             self.resolutions,
             cfg.table_size,
             cfg.n_features,
-            backend=cfg.backend,
             merged_backward=cfg.merged_backward,
         )
 

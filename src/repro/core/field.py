@@ -53,8 +53,7 @@ class FieldConfig:
     hidden: int = 64
     geo_features: int = 15          # density MLP extra outputs (NGP baseline)
     sh_degree: int = 4
-    # kernels
-    backend: str = "ref"
+    # kernels (routing resolves through the repro.kernels backend registry)
     merged_backward: bool = True
     grid_dtype: str = "float32"
 
@@ -66,7 +65,6 @@ class FieldConfig:
             log2_table_size=log2_t,
             base_resolution=self.base_resolution,
             max_resolution=self.max_resolution,
-            backend=self.backend,
             merged_backward=self.merged_backward,
         )
 
@@ -119,7 +117,7 @@ class Field:
         """points (N,3) in [0,1) -> (sigma (N,), geo (N, geo_features))."""
         h = self.density_enc(points, params["density_grid"])
         m = params["density_mlp"]
-        out = mlp_ops.mlp2(h, m["w1"], m["b1"], m["w2"], m["b2"], backend=self.cfg.backend)
+        out = mlp_ops.mlp2(h, m["w1"], m["b1"], m["w2"], m["b2"])
         return trunc_exp(out[..., 0]), out[..., 1:]
 
     def query(self, params: dict, points: jnp.ndarray, dirs: jnp.ndarray):
@@ -134,7 +132,6 @@ class Field:
         m = params["color_mlp"]
         raw = mlp_ops.mlp3(
             cin, m["w1"], m["b1"], m["w2"], m["b2"], m["w3"], m["b3"],
-            backend=self.cfg.backend,
         )
         return sigma, jax.nn.sigmoid(raw)
 

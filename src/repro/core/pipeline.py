@@ -1,0 +1,186 @@
+"""Staged render pipeline with occupancy-compacted field queries.
+
+The paper's central bottleneck is hash-grid interpolation traffic
+(~200k lookups/iteration); Instant-3D wins by *not issuing* memory traffic
+for samples the occupancy grid already culled.  The monolithic
+`rendering.render_rays` queried the field at all B×S points and only zeroed
+sigma afterward — empty-space skipping saved no compute.  This module splits
+rendering into explicit stages so the field only ever sees live points:
+
+    1. generate_samples   rays × ts -> world points, per-sample dirs
+    2. cull               AABB test + occupancy-bitfield lookup -> live mask
+    3. compact            stable argsort on liveness + gather to a fixed,
+                          jit-stable `budget` of points (overflow accounted)
+    4. shade              hash-encode + MLPs on the compacted set only
+    5. scatter/composite  scatter sigma/rgb back to B×S, volume-render
+
+The budget is a *static* python int (it fixes compiled shapes); callers pick
+it from a measured live fraction — `suggest_budget` buckets to powers of two
+so recompiles are bounded.  With `budget=None` the pipeline runs the dense
+path (query everything, mask sigma), which is also the autodiff oracle the
+compaction tests compare against.
+
+Compaction is differentiable: gather of points/dirs carries no parameter
+gradient, and the scatter of (sigma, rgb) is a permutation `.at[idx].set`
+whose VJP is the corresponding gather — gradients w.r.t. field params match
+the dense path exactly whenever every live point fits in the budget.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import occupancy as occ_lib
+from . import rendering as _r
+from ..kernels.volume_render import ops as vr_ops
+
+
+def _cube_root(n: int) -> int:
+    r = round(n ** (1.0 / 3.0))
+    for cand in (r - 1, r, r + 1):
+        if cand > 0 and cand ** 3 == n:
+            return cand
+    raise ValueError(f"bitfield length {n} is not a cube")
+
+
+def suggest_budget(
+    live_fraction: float,
+    n_total: int,
+    *,
+    headroom: float = 1.3,
+    min_budget: int = 512,
+) -> int:
+    """Pow2-bucketed point budget for a measured live fraction.
+
+    Bucketing bounds the number of distinct compiled shapes to
+    O(log2(n_total / min_budget)); headroom absorbs drift between the
+    measurement (e.g. occupancy fraction at the last grid update) and the
+    live fraction of the current batch.
+    """
+    want = int(n_total * min(1.0, max(0.0, live_fraction) * headroom))
+    b = min_budget
+    while b < want:
+        b *= 2
+    return min(b, n_total)
+
+
+class CompactionPlan(NamedTuple):
+    idx: jnp.ndarray       # (budget,) unique flat-sample indices, live-first
+    keep: jnp.ndarray      # (budget,) bool — False on padded dead lanes
+    n_live: jnp.ndarray    # () int32 total live points before compaction
+    overflow: jnp.ndarray  # () int32 live points dropped (budget too small)
+
+
+class RenderPipeline:
+    """Callable pipeline; stages are exposed as methods for testing/benching."""
+
+    def __init__(self, field, cfg: _r.RenderConfig):
+        self.field = field
+        self.cfg = cfg
+
+    # ---- stage 1: sample generation ----
+
+    def generate_samples(self, origins, dirs, ts):
+        """-> (flat world points (N,3), flat dirs (N,3), unit coords (N,3))."""
+        points = origins[:, None, :] + ts[..., None] * dirs[:, None, :]  # (B,S,3)
+        flat_pts = points.reshape(-1, 3)
+        flat_dirs = jnp.broadcast_to(dirs[:, None, :], points.shape).reshape(-1, 3)
+        unit = _r.normalize_points(flat_pts, self.cfg)
+        return flat_pts, flat_dirs, unit
+
+    # ---- stage 2: cull ----
+
+    def cull(self, flat_pts, unit, bitfield=None, mask_fn=None):
+        """AABB + occupancy liveness.  bitfield is a (R^3,) bool array (the
+        jit-traceable form from occupancy.bitfield); mask_fn is the legacy
+        closure hook kept for render_rays compatibility."""
+        live = _r.inside_aabb(flat_pts, self.cfg)
+        if bitfield is not None:
+            r = _cube_root(bitfield.shape[0])
+            live = live & occ_lib.point_liveness(bitfield, unit, r)
+        if mask_fn is not None:  # composes with the bitfield when both given
+            live = live & mask_fn(unit)
+        return live
+
+    # ---- stage 3: compact ----
+
+    def compact(self, live, budget: int) -> CompactionPlan:
+        """Stable argsort-on-liveness; first `budget` slots are the live set
+        (original flat order preserved), padded with dead samples."""
+        order = jnp.argsort(jnp.logical_not(live))  # stable: live-first
+        idx = order[:budget]
+        n_live = jnp.sum(live.astype(jnp.int32))
+        keep = live[idx]
+        overflow = jnp.maximum(n_live - budget, 0)
+        return CompactionPlan(idx, keep, n_live, overflow)
+
+    # ---- stage 4: shade ----
+
+    def shade(self, params, unit, dirs):
+        return self.field.query(params, unit, dirs)
+
+    # ---- stage 5: scatter + composite ----
+
+    def composite(self, sigma, rgb, ts):
+        b, s = ts.shape
+        deltas = jnp.diff(ts, axis=-1, append=ts[:, -1:] + (self.cfg.far - self.cfg.near) / s)
+        out = vr_ops.composite(sigma.reshape(b, s), rgb.reshape(b, s, 3), deltas, ts)
+        color = out.color
+        if self.cfg.white_background:
+            color = color + (1.0 - out.opacity[..., None])
+        return {
+            "rgb": color,
+            "depth": out.depth,
+            "opacity": out.opacity,
+            "weights": out.weights,
+        }
+
+    # ---- full pipeline ----
+
+    def __call__(
+        self,
+        params,
+        origins,
+        dirs,
+        ts,
+        *,
+        bitfield=None,
+        mask_fn=None,
+        budget: int | None = None,
+    ):
+        """Render a ray batch.  budget MUST be a static python int (or None
+        for the dense path) — it fixes the compiled point-batch shape."""
+        b, s = ts.shape
+        n = b * s
+        flat_pts, flat_dirs, unit = self.generate_samples(origins, dirs, ts)
+        live = self.cull(flat_pts, unit, bitfield=bitfield, mask_fn=mask_fn)
+
+        if budget is None:
+            sigma, rgb = self.shade(params, unit, flat_dirs)
+            sigma = jnp.where(live, sigma, 0.0)
+            n_live = jnp.sum(live.astype(jnp.int32))
+            overflow = jnp.zeros((), jnp.int32)
+            points_queried = n
+        else:
+            budget = min(int(budget), n)
+            plan = self.compact(live, budget)
+            sigma_c, rgb_c = self.shade(params, unit[plan.idx], flat_dirs[plan.idx])
+            sigma = jnp.zeros((n,), sigma_c.dtype).at[plan.idx].set(
+                jnp.where(plan.keep, sigma_c, 0.0)
+            )
+            rgb = jnp.zeros((n, 3), rgb_c.dtype).at[plan.idx].set(
+                rgb_c * plan.keep[:, None].astype(rgb_c.dtype)
+            )
+            n_live, overflow = plan.n_live, plan.overflow
+            points_queried = budget
+
+        out = self.composite(sigma, rgb, ts)
+        out.update(
+            live_fraction=jnp.mean(live.astype(jnp.float32)),
+            n_live=n_live,
+            overflow=overflow,
+            points_queried=jnp.asarray(points_queried, jnp.int32),
+        )
+        return out

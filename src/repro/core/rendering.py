@@ -13,8 +13,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..kernels.volume_render import ops as vr_ops
-
 
 @dataclass(frozen=True)
 class RenderConfig:
@@ -25,7 +23,6 @@ class RenderConfig:
     aabb_max: float = 1.5
     white_background: bool = True
     stratified: bool = True
-    backend: str = "ref"
 
 
 class RayBatch(NamedTuple):
@@ -109,31 +106,15 @@ def render_rays(
 ):
     """Differentiable render. origins/dirs (B,3), ts (B,S) -> dict of outputs.
 
-    occupancy_mask_fn: optional (points_unit (N,3) -> bool (N,)) culling hook;
-    masked samples contribute zero density (paper/NGP empty-space skipping).
+    Compatibility wrapper over the staged `pipeline.RenderPipeline` dense
+    path (query all points, mask sigma).  occupancy_mask_fn: optional
+    (points_unit (N,3) -> bool (N,)) culling hook; masked samples contribute
+    zero density (paper/NGP empty-space skipping).  New code should use
+    RenderPipeline directly — with a point budget it skips the culled
+    queries instead of just zeroing them.
     """
-    b, s = ts.shape
-    points = origins[:, None, :] + ts[..., None] * dirs[:, None, :]  # (B, S, 3)
-    flat_pts = points.reshape(-1, 3)
-    unit = normalize_points(flat_pts, cfg)
-    live = inside_aabb(flat_pts, cfg)
-    if occupancy_mask_fn is not None:
-        live = live & occupancy_mask_fn(unit)
+    from .pipeline import RenderPipeline  # late import: pipeline imports us
 
-    flat_dirs = jnp.broadcast_to(dirs[:, None, :], points.shape).reshape(-1, 3)
-    sigma, rgb = field.query(params, unit, flat_dirs)
-    sigma = jnp.where(live, sigma, 0.0).reshape(b, s)
-    rgb = rgb.reshape(b, s, 3)
-
-    deltas = jnp.diff(ts, axis=-1, append=ts[:, -1:] + (cfg.far - cfg.near) / s)
-    out = vr_ops.composite(sigma, rgb, deltas, ts, backend=cfg.backend)
-    color = out.color
-    if cfg.white_background:
-        color = color + (1.0 - out.opacity[..., None])
-    return {
-        "rgb": color,
-        "depth": out.depth,
-        "opacity": out.opacity,
-        "weights": out.weights,
-        "live_fraction": jnp.mean(live.astype(jnp.float32)),
-    }
+    return RenderPipeline(field, cfg)(
+        params, origins, dirs, ts, mask_fn=occupancy_mask_fn
+    )

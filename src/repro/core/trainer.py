@@ -26,6 +26,7 @@ import numpy as np
 
 from . import field as field_lib
 from . import losses, occupancy, rendering
+from .pipeline import RenderPipeline, suggest_budget
 from ..optim import AdamW
 
 # note: the sampler/dataset arguments below are duck-typed (repro.data types);
@@ -48,6 +49,12 @@ class TrainerConfig:
     render: rendering.RenderConfig = dc_field(default_factory=rendering.RenderConfig)
     seed: int = 0
     eval_chunk: int = 4096
+    # occupancy-compacted field queries (pipeline stage 3): only live points
+    # hit the hash grids; the budget tracks the measured live fraction in
+    # pow2 buckets (bounded recompiles) with headroom against drift.
+    compact: bool = True
+    budget_headroom: float = 1.3
+    min_budget: int = 512
 
 
 def _branch_update(i: int, freq: float) -> bool:
@@ -76,7 +83,12 @@ class Instant3DTrainer:
         self.opt = AdamW(
             lr=cfg.lr, b2=cfg.b2, eps=cfg.eps, weight_decay=0.0, lr_scale_fn=lr_scale
         )
+        self.pipeline = RenderPipeline(field, cfg.render)
         self._step_fns = {}
+        self._eval_render = None
+        # host-side live-fraction estimate driving the compaction budget;
+        # starts at 1.0 (occupancy warmup = all-occupied => dense)
+        self._live_frac = 1.0
 
     # ---- state ----
 
@@ -91,9 +103,10 @@ class Instant3DTrainer:
 
     # ---- jitted step ----
 
-    def _make_step(self, freeze_color: bool, freeze_density: bool = False):
-        field, cfg, opt = self.field, self.cfg, self.opt
-        decomposed = field.cfg.decomposed
+    def _make_step(self, freeze_color: bool, freeze_density: bool = False,
+                   budget: int | None = None, use_bits: bool = False):
+        cfg, opt, pipeline = self.cfg, self.opt, self.pipeline
+        decomposed = self.field.cfg.decomposed
 
         def loss_fn(params, batch: rendering.RayBatch, ts, occ_ema):
             if freeze_color and decomposed:
@@ -102,17 +115,27 @@ class Instant3DTrainer:
             if freeze_density:
                 params = dict(params)
                 params["density_grid"] = jax.lax.stop_gradient(params["density_grid"])
-            mask_fn = None
-            if cfg.use_occupancy:
-                state = occupancy.OccupancyState(occ_ema, jnp.zeros((), jnp.int32))
-                mask_fn = occupancy.occupied_mask_fn(state, cfg.occ)
-            out = rendering.render_rays(
-                field, params, batch.origins, batch.dirs, ts, cfg.render, mask_fn
+            bits = None
+            if use_bits:
+                # zero-init EMA is exactly zero until the first update folds
+                # (trunc_exp densities are strictly positive afterwards), so
+                # max>0 recovers the step for bitfield's all-occupied warmup
+                # even when callers invoke step_fn directly on a fresh state
+                folded = (jnp.max(occ_ema) > 0.0).astype(jnp.int32)
+                state = occupancy.OccupancyState(occ_ema, folded)
+                bits = occupancy.bitfield(state, cfg.occ)
+            out = pipeline(
+                params, batch.origins, batch.dirs, ts, bitfield=bits, budget=budget
             )
-            return losses.mse(out["rgb"], batch.rgb_gt), out["live_fraction"]
+            aux = {
+                "live_fraction": out["live_fraction"],
+                "overflow": out["overflow"],
+                "points_queried": out["points_queried"],
+            }
+            return losses.mse(out["rgb"], batch.rgb_gt), aux
 
         def step(params, opt_state, batch, ts, occ_ema):
-            (loss, live), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
                 params, batch, ts, occ_ema
             )
             mask = jax.tree.map(lambda _: True, params)
@@ -121,15 +144,36 @@ class Instant3DTrainer:
             if freeze_density:
                 mask["density_grid"] = False
             params, opt_state = opt.apply(params, grads, opt_state, mask=mask)
-            return params, opt_state, loss, live
+            return params, opt_state, loss, aux
 
         return jax.jit(step, donate_argnums=(0, 1))
 
-    def step_fn(self, freeze_color: bool, freeze_density: bool = False):
-        key = (freeze_color, freeze_density)
+    def step_fn(self, freeze_color: bool, freeze_density: bool = False,
+                budget: int | None = None, use_bits: bool | None = None):
+        if use_bits is None:
+            use_bits = self.cfg.use_occupancy
+        key = (freeze_color, freeze_density, budget, use_bits)
         if key not in self._step_fns:
-            self._step_fns[key] = self._make_step(freeze_color, freeze_density)
+            self._step_fns[key] = self._make_step(
+                freeze_color, freeze_density, budget, use_bits
+            )
         return self._step_fns[key]
+
+    def _current_budget(self, use_bits: bool) -> int | None:
+        """Static point budget for the next step, or None for the dense path.
+
+        Gated on use_bits: before the first occupancy update the bitfield is
+        inactive and nearly all in-box samples are live, so a carried-over
+        budget (e.g. trainer reused on a fresh state) would silently drop
+        live samples."""
+        if not (self.cfg.compact and self.cfg.use_occupancy and use_bits):
+            return None
+        n_total = self.cfg.n_rays * self.cfg.render.n_samples
+        budget = suggest_budget(
+            self._live_frac, n_total,
+            headroom=self.cfg.budget_headroom, min_budget=self.cfg.min_budget,
+        )
+        return None if budget >= n_total else budget
 
     # ---- driver ----
 
@@ -144,10 +188,19 @@ class Instant3DTrainer:
         cfg = self.cfg
         iters = iters if iters is not None else cfg.iters
         key = jax.random.PRNGKey(cfg.seed)
-        history = {"step": [], "loss": [], "live_fraction": [], "wall_s": []}
+        history = {"step": [], "loss": [], "live_fraction": [], "wall_s": [],
+                   "points_queried": [], "overflow": []}
+        # per-step overflow scalars kept on device (no per-step host sync);
+        # folded into history at the end so no overflowing step goes unseen
+        overflow_accum = []
         t0 = time.perf_counter()
 
         params, opt_state, occ_state = state.params, state.opt_state, state.occ_state
+        # bitfield is meaningless until the first EMA fold (init is zeros);
+        # render dense until then, and budget from the measured live fraction
+        occ_updates = int(occ_state.step) if cfg.use_occupancy else 0
+        if occ_updates == 0:
+            self._live_frac = 1.0  # fresh state: forget any previous run
         for local_i in range(iters):
             i = state.step + local_i
             key_batch, key_ts, key_occ = jax.random.split(jax.random.fold_in(key, i), 3)
@@ -159,43 +212,89 @@ class Instant3DTrainer:
             freeze_color = (not update_color) and self.field.cfg.decomposed
             freeze_density = not update_density
 
-            step = self.step_fn(freeze_color, freeze_density)
-            params, opt_state, loss, live = step(
+            use_bits = cfg.use_occupancy and occ_updates > 0
+            step = self.step_fn(
+                freeze_color, freeze_density, self._current_budget(use_bits), use_bits
+            )
+            params, opt_state, loss, aux = step(
                 params, opt_state, batch, ts, occ_state.density_ema
             )
+            overflow_accum.append(aux["overflow"])
 
             if cfg.use_occupancy and i >= cfg.occ.warmup_steps and (i + 1) % cfg.occ.update_interval == 0:
                 occ_state = occupancy.update(self.field, params, occ_state, cfg.occ, key_occ)
+                occ_updates += 1
+                # re-measure the batch live fraction at the occupancy cadence
+                # (one host sync per update, not per step) to size the budget;
+                # overflow here means the live set outgrew the bucket between
+                # measurements — widen beyond the measurement so the next
+                # bucket has room
+                if use_bits:
+                    measured = float(aux["live_fraction"])
+                    # consider every step since the last update, not just this
+                    # one — per-step live counts fluctuate with stratified ts
+                    recent = overflow_accum[-cfg.occ.update_interval:]
+                    if int(jnp.sum(jnp.stack(recent))) > 0:
+                        measured = min(1.0, measured * 2.0)
+                    self._live_frac = measured
 
             if (local_i + 1) % log_every == 0 or local_i == iters - 1:
                 history["step"].append(i + 1)
                 history["loss"].append(float(loss))
-                history["live_fraction"].append(float(live))
+                history["live_fraction"].append(float(aux["live_fraction"]))
+                history["points_queried"].append(int(aux["points_queried"]))
+                history["overflow"].append(int(aux["overflow"]))
                 history["wall_s"].append(time.perf_counter() - t0)
                 if callback is not None:
                     callback(i + 1, params, history)
 
+        if overflow_accum:
+            all_overflow = jnp.stack(overflow_accum)
+            history["overflow_total"] = int(jnp.sum(all_overflow))
+            history["overflow_steps"] = int(jnp.sum(all_overflow > 0))
+        else:
+            history["overflow_total"] = 0
+            history["overflow_steps"] = 0
         return TrainState(params, opt_state, occ_state, state.step + iters), history
 
     # ---- evaluation ----
+
+    def _eval_render_fn(self):
+        """Jitted dense-pipeline chunk renderer; every chunk is padded to the
+        same (eval_chunk, n_samples) shape so exactly one compile happens
+        regardless of image size."""
+        if self._eval_render is None:
+            pipeline = self.pipeline
+
+            def render_chunk(params, origins, dirs, ts):
+                out = pipeline(params, origins, dirs, ts)
+                return out["rgb"], out["depth"]
+
+            self._eval_render = jax.jit(render_chunk)
+        return self._eval_render
 
     def render_image(self, params, pose: np.ndarray, ds):
         cfg = self.cfg
         h, w = ds.h, ds.w
         py, px = jnp.meshgrid(jnp.arange(h), jnp.arange(w), indexing="ij")
-        px, py = px.reshape(-1), py.reshape(-1)
+        o, d = rendering.pixel_rays(
+            jnp.asarray(pose), px.reshape(-1), py.reshape(-1), h, w, ds.focal
+        )
+        n = h * w
+        chunk = min(cfg.eval_chunk, n)
+        pad = (-n) % chunk
+        if pad:  # repeat the last ray: keeps dirs unit-norm, trimmed below
+            o = jnp.concatenate([o, jnp.broadcast_to(o[-1:], (pad, 3))])
+            d = jnp.concatenate([d, jnp.broadcast_to(d[-1:], (pad, 3))])
+        ts = rendering.sample_ts(None, chunk, cfg.render)
+        fn = self._eval_render_fn()
         rgb_out, dep_out = [], []
-        for i in range(0, px.shape[0], cfg.eval_chunk):
-            o, d = rendering.pixel_rays(
-                jnp.asarray(pose), px[i : i + cfg.eval_chunk], py[i : i + cfg.eval_chunk],
-                h, w, ds.focal,
-            )
-            ts = rendering.sample_ts(None, o.shape[0], cfg.render)
-            out = rendering.render_rays(self.field, params, o, d, ts, cfg.render)
-            rgb_out.append(out["rgb"])
-            dep_out.append(out["depth"])
-        rgb = jnp.concatenate(rgb_out).reshape(h, w, 3)
-        dep = jnp.concatenate(dep_out).reshape(h, w)
+        for i in range(0, n + pad, chunk):
+            rgb_c, dep_c = fn(params, o[i : i + chunk], d[i : i + chunk], ts)
+            rgb_out.append(rgb_c)
+            dep_out.append(dep_c)
+        rgb = jnp.concatenate(rgb_out)[:n].reshape(h, w, 3)
+        dep = jnp.concatenate(dep_out)[:n].reshape(h, w)
         return np.asarray(rgb), np.asarray(dep)
 
     def evaluate(self, params, ds, views=None) -> dict:

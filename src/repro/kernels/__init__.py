@@ -3,5 +3,124 @@
 Each subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 public wrapper with backend routing), ref.py (pure-jnp oracle used both for
 allclose validation and as the CPU/autodiff path).
+
+Backend selection is centralized here in the `KernelBackend` registry: every
+ops module resolves its routing through `resolve_backend(...)` instead of
+carrying its own `backend: str` knob.  The one user-facing knob is the
+process-wide default, set via `set_backend(...)`, the `REPRO_BACKEND` env
+var, or left on "auto" (capability detection picks the best available).
+
+Canonical backends:
+
+  ref              pure jnp — CPU production path and the autodiff oracle
+  pallas-interpret Pallas kernels in interpreter mode (validation on CPU)
+  pallas-tpu       compiled Pallas kernels (requires a TPU jax backend)
+
+Aliases accepted anywhere a backend name is taken: "pallas" (best pallas
+flavor for the platform: tpu if available, else interpret) and "auto" (tpu
+kernels on TPU, ref elsewhere).
 """
-from . import hash_encode, grid_update, fused_mlp, volume_render  # noqa: F401
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+
+import jax
+
+
+@dataclass(frozen=True)
+class KernelBackend:
+    """Resolved routing decision shared by every ops module.
+
+    use_pallas: route to the Pallas kernel (vs the jnp reference).
+    interpret:  run the Pallas kernel in interpreter mode (non-TPU hosts).
+    """
+    name: str
+    use_pallas: bool
+    interpret: bool
+
+
+REF = KernelBackend("ref", use_pallas=False, interpret=False)
+PALLAS_INTERPRET = KernelBackend("pallas-interpret", use_pallas=True, interpret=True)
+PALLAS_TPU = KernelBackend("pallas-tpu", use_pallas=True, interpret=False)
+
+_CANONICAL = {b.name: b for b in (REF, PALLAS_INTERPRET, PALLAS_TPU)}
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover - jax not initialized
+        return False
+
+
+def available_backends() -> tuple[str, ...]:
+    """Capability detection: which canonical backends can run on this host."""
+    names = ["ref"]
+    try:
+        from jax.experimental import pallas  # noqa: F401
+        names.append("pallas-interpret")
+        if _on_tpu():
+            names.append("pallas-tpu")
+    except ImportError:  # pragma: no cover - pallas ships with jax
+        pass
+    return tuple(names)
+
+
+def resolve_backend(backend: str | KernelBackend | None = None) -> KernelBackend:
+    """Map a user-facing name (or None => process default) to a KernelBackend."""
+    if backend is None:
+        return get_backend()
+    if isinstance(backend, KernelBackend):
+        return backend
+    name = backend.lower()
+    if name == "auto":
+        return PALLAS_TPU if _on_tpu() else REF
+    if name == "pallas":
+        b = PALLAS_TPU if _on_tpu() else PALLAS_INTERPRET
+        if b.name not in available_backends():
+            raise ValueError(
+                f"backend 'pallas' resolves to {b.name!r}, unavailable on this "
+                f"host; have {available_backends()}"
+            )
+        return b
+    if name in _CANONICAL:
+        b = _CANONICAL[name]
+        if b.name not in available_backends():
+            raise ValueError(
+                f"backend {name!r} unavailable on this host; have {available_backends()}"
+            )
+        return b
+    raise ValueError(
+        f"unknown backend {backend!r}; expected one of "
+        f"{tuple(_CANONICAL)} or aliases ('auto', 'pallas')"
+    )
+
+
+_default: KernelBackend | None = None
+
+
+def get_backend() -> KernelBackend:
+    """The process-wide default backend (the single user-facing knob)."""
+    global _default
+    if _default is None:
+        _default = resolve_backend(os.environ.get("REPRO_BACKEND", "auto"))
+    return _default
+
+
+def set_backend(backend: str | KernelBackend) -> KernelBackend:
+    """Set the process-wide default; returns the resolved KernelBackend.
+
+    Binding times differ by op: hash-grid encoders bake routing (forward
+    AND merged-backward) at construction, while MLP/composite ops resolve
+    at trace time — and already-compiled jitted functions are never
+    invalidated by this call.  Changing the backend mid-session therefore
+    yields a mix of old and new routing; set it once, before building
+    models or tracing any step function.
+    """
+    global _default
+    _default = resolve_backend(backend)
+    return _default
+
+
+from . import hash_encode, grid_update, fused_mlp, volume_render  # noqa: F401,E402

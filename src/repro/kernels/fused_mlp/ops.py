@@ -1,5 +1,17 @@
-"""Jitted wrappers for the fused NeRF MLPs with backend routing + padding."""
+"""Jitted wrappers for the fused NeRF MLPs with backend routing + padding.
+
+Routing resolves through the `repro.kernels` KernelBackend registry:
+`backend=None` uses the process default; strings ("ref", "pallas",
+"pallas-interpret", "pallas-tpu", "auto") are accepted as explicit overrides.
+
+The Pallas kernels are forward-only; to keep pallas backends trainable the
+wrappers carry a custom VJP whose backward is the autodiff of the jnp
+reference (numerically the oracle gradient).  A fused backward kernel is a
+future optimization — see ROADMAP.
+"""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -16,23 +28,61 @@ def _pad_rows(x, multiple):
     return jnp.concatenate([x, jnp.zeros((pad, x.shape[1]), x.dtype)]), n
 
 
-def mlp2(x, w1, b1, w2, b2, *, backend: str = "ref", block_rows: int = _kernel.DEFAULT_BLOCK_ROWS):
-    if backend == "pallas":
-        xp, n = _pad_rows(x, block_rows)
-        out = _kernel.fused_mlp2(
-            xp, w1, b1, w2, b2, block_rows=block_rows,
-            interpret=jax.default_backend() != "tpu",
-        )
-        return out[:n]
+def _resolve(backend):
+    from .. import resolve_backend
+    return resolve_backend(backend)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _mlp2_pallas(x, w1, b1, w2, b2, block_rows, interpret):
+    xp, n = _pad_rows(x, block_rows)
+    out = _kernel.fused_mlp2(xp, w1, b1, w2, b2, block_rows=block_rows,
+                             interpret=interpret)
+    return out[:n]
+
+
+def _mlp2_fwd(x, w1, b1, w2, b2, block_rows, interpret):
+    return _mlp2_pallas(x, w1, b1, w2, b2, block_rows, interpret), (x, w1, b1, w2, b2)
+
+
+def _mlp2_bwd(block_rows, interpret, res, g):
+    _, vjp = jax.vjp(ref.mlp2, *res)
+    return vjp(g)
+
+
+_mlp2_pallas.defvjp(_mlp2_fwd, _mlp2_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8))
+def _mlp3_pallas(x, w1, b1, w2, b2, w3, b3, block_rows, interpret):
+    xp, n = _pad_rows(x, block_rows)
+    out = _kernel.fused_mlp3(xp, w1, b1, w2, b2, w3, b3, block_rows=block_rows,
+                             interpret=interpret)
+    return out[:n]
+
+
+def _mlp3_fwd(x, w1, b1, w2, b2, w3, b3, block_rows, interpret):
+    out = _mlp3_pallas(x, w1, b1, w2, b2, w3, b3, block_rows, interpret)
+    return out, (x, w1, b1, w2, b2, w3, b3)
+
+
+def _mlp3_bwd(block_rows, interpret, res, g):
+    _, vjp = jax.vjp(ref.mlp3, *res)
+    return vjp(g)
+
+
+_mlp3_pallas.defvjp(_mlp3_fwd, _mlp3_bwd)
+
+
+def mlp2(x, w1, b1, w2, b2, *, backend=None, block_rows: int = _kernel.DEFAULT_BLOCK_ROWS):
+    be = _resolve(backend)
+    if be.use_pallas:
+        return _mlp2_pallas(x, w1, b1, w2, b2, block_rows, be.interpret)
     return ref.mlp2(x, w1, b1, w2, b2)
 
 
-def mlp3(x, w1, b1, w2, b2, w3, b3, *, backend: str = "ref", block_rows: int = _kernel.DEFAULT_BLOCK_ROWS):
-    if backend == "pallas":
-        xp, n = _pad_rows(x, block_rows)
-        out = _kernel.fused_mlp3(
-            xp, w1, b1, w2, b2, w3, b3, block_rows=block_rows,
-            interpret=jax.default_backend() != "tpu",
-        )
-        return out[:n]
+def mlp3(x, w1, b1, w2, b2, w3, b3, *, backend=None, block_rows: int = _kernel.DEFAULT_BLOCK_ROWS):
+    be = _resolve(backend)
+    if be.use_pallas:
+        return _mlp3_pallas(x, w1, b1, w2, b2, w3, b3, block_rows, be.interpret)
     return ref.mlp3(x, w1, b1, w2, b2, w3, b3)

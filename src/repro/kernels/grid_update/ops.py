@@ -28,7 +28,7 @@ def _sort_updates(idx: jnp.ndarray, vals: jnp.ndarray, table_size: int, pad_to: 
     return idx_s, vals_s
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "backend"))
 def merged_scatter_add(
     table: jnp.ndarray,
     idx: jnp.ndarray,
@@ -36,8 +36,19 @@ def merged_scatter_add(
     *,
     use_pallas: bool = False,
     interpret: bool = True,
+    backend=None,
 ) -> jnp.ndarray:
-    """table (T,F) += vals (M,F) at rows idx (M,) with BUM-merged writes."""
+    """table (T,F) += vals (M,F) at rows idx (M,) with BUM-merged writes.
+
+    The XLA segment-merge (default) is the production CPU path; `backend`
+    (a `repro.kernels` registry name or KernelBackend) routes the commit
+    stage to the Pallas kernel, overriding the use_pallas/interpret pair
+    (kernel-level escape hatch kept for direct validation).
+    """
+    if backend is not None:
+        from .. import resolve_backend
+        be = resolve_backend(backend)
+        use_pallas, interpret = be.use_pallas, be.interpret
     t = table.shape[0]
     if use_pallas:
         idx_s, vals_s = _sort_updates(idx, vals, t, _kernel.DEFAULT_BLOCK)

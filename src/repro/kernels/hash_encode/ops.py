@@ -7,8 +7,10 @@ scatter-add.  All L levels are merged in one pass by offsetting level-l
 addresses by l*T — a merge window covering the whole batch across levels,
 strictly stronger than the paper's 16-deep per-core buffer.
 
-Backend routing: 'ref' (pure jnp — the production CPU path and the autodiff
-oracle), 'pallas' (the TPU kernel; interpret=True on this CPU container).
+Backend routing resolves through the `repro.kernels` KernelBackend registry
+('ref' = pure jnp, the production CPU path and the autodiff oracle;
+'pallas-interpret'/'pallas-tpu' = the Pallas kernel).  `backend=None` defers
+to the process default at encoder-build time.
 """
 from __future__ import annotations
 
@@ -33,8 +35,11 @@ def _pad_to(x: jnp.ndarray, multiple: int, fill=0.0):
     return jnp.concatenate([x, pad_block]), n
 
 
-def _forward(points, tables, resolutions, dense_flags, backend: str, block_points: int):
-    if backend == "pallas":
+def _forward(points, tables, resolutions, dense_flags, be, block_points: int):
+    if isinstance(be, str) or be is None:  # accept registry names too
+        from .. import resolve_backend
+        be = resolve_backend(be)
+    if be.use_pallas:
         pts, n = _pad_to(points, block_points, fill=0.5)
         out = _kernel.hash_encode_pallas(
             pts,
@@ -42,7 +47,7 @@ def _forward(points, tables, resolutions, dense_flags, backend: str, block_point
             jnp.asarray(resolutions, jnp.int32),
             jnp.asarray(dense_flags, jnp.int32),
             block_points=block_points,
-            interpret=jax.default_backend() != "tpu",
+            interpret=be.interpret,
         )
         return out[:n]
     return ref.hash_encode(points, tables, resolutions)
@@ -71,15 +76,18 @@ def make_hash_encode(
     table_size: int,
     n_features: int,
     *,
-    backend: str = "ref",
+    backend=None,
     merged_backward: bool = True,
     block_points: int = _kernel.DEFAULT_BLOCK_POINTS,
 ) -> Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]:
     """Build a differentiable multires hash encoder for fixed level geometry.
 
     resolutions: static per-level grid resolutions (from ref.level_resolutions).
+    backend: registry name or None (process default, resolved at build time).
     Returns encode(points (N,3), tables (L,T,F)) -> (N, L*F) float32.
     """
+    from .. import resolve_backend
+    be = resolve_backend(backend)
     resolutions = tuple(int(r) for r in resolutions)
     dense_flags = tuple(
         bool(x) for x in ref.level_is_dense(np.asarray(resolutions), table_size)
@@ -88,10 +96,10 @@ def make_hash_encode(
 
     @jax.custom_vjp
     def encode(points, tables):
-        return _forward(points, tables, resolutions, dense_flags, backend, block_points)
+        return _forward(points, tables, resolutions, dense_flags, be, block_points)
 
     def encode_fwd(points, tables):
-        out = _forward(points, tables, resolutions, dense_flags, backend, block_points)
+        out = _forward(points, tables, resolutions, dense_flags, be, block_points)
         # zero-size residual carries tables' dtype (dtypes aren't JAX types)
         return out, (points, jnp.zeros((0,), tables.dtype))
 
@@ -102,7 +110,9 @@ def make_hash_encode(
         idx, vals = _corner_updates(points, resolutions, dense_flags, table_size, grad)
         flat = jnp.zeros((num_l * table_size, n_features), jnp.float32)
         if merged_backward:
-            flat = grid_update_ops.merged_scatter_add(flat, idx, vals)
+            # commit stage follows the encoder's backend: pallas flavors use
+            # the BUM scatter kernel, ref stays on the XLA segment merge
+            flat = grid_update_ops.merged_scatter_add(flat, idx, vals, backend=be)
         else:
             flat = flat.at[idx].add(vals)
         grad_tables = flat.reshape(num_l, table_size, n_features).astype(tdtype)

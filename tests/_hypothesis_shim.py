@@ -1,0 +1,68 @@
+"""Fallback property-testing shim for containers without `hypothesis`.
+
+Test modules import `given`, `settings`, and `strategies as st` from here.
+When the real hypothesis is installed it is used verbatim; otherwise a
+minimal deterministic re-implementation runs each property against
+`max_examples` pseudo-random samples (seeded, so failures reproduce).  Only
+the strategy surface this repo uses is provided: integers, booleans,
+sampled_from.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+except ImportError:
+    import random
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rnd: random.Random):
+            return self._draw(rnd)
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rnd: rnd.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rnd: seq[rnd.randrange(len(seq))])
+
+    def given(**strats):
+        def deco(fn):
+            # NOTE: no functools.wraps — pytest would follow __wrapped__ to
+            # the original signature and try to resolve the strategy args as
+            # fixtures.  The wrapper must present a zero-arg signature.
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                rnd = random.Random(0xC0FFEE)
+                for i in range(n):
+                    drawn = {k: s.example(rnd) for k, s in strats.items()}
+                    try:
+                        fn(**drawn)
+                    except Exception as e:  # noqa: BLE001 - re-raise with repro info
+                        raise AssertionError(
+                            f"property failed on example {i}: {drawn!r}"
+                        ) from e
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
