@@ -1,0 +1,138 @@
+"""serve3d service benchmark -> BENCH_serve3d.json.
+
+Measures the reconstruction service end to end: N procedural scenes train
+concurrently under the round-robin scheduler while a novel-view render of a
+held-out pose is requested after every slice.  Records
+
+* scenes/sec (completed reconstructions per wall-clock second),
+* p50/p95 render latency (request submit -> result, mid-training),
+* time-to-first-usable-view per scene (first served render whose PSNR
+  against ground truth crosses the threshold),
+* PSNR parity: the interleaved scheduler must reach the same PSNR per scene
+  as sequential single-scene training at equal per-scene iteration counts
+  (the deterministic step-keyed streams make this exact, not just close).
+
+    PYTHONPATH=src python -m benchmarks.bench_serve3d [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core import Field, FieldConfig, Instant3DTrainer, TrainerConfig, losses, occupancy
+from repro.core.rendering import RenderConfig
+from repro.data import build_dataset, RaySampler
+from repro.serve3d import ReconstructionService
+
+from . import common
+
+
+def run(smoke: bool = False):
+    scenes = 2 if smoke else 4
+    iters = 16 if smoke else 96
+    slice_iters = 8
+    hw = 16 if smoke else 24
+    views = 3 if smoke else 6
+    psnr_threshold = 10.0 if smoke else 15.0
+
+    render = RenderConfig(n_samples=8 if smoke else 16)
+    field_cfg = FieldConfig(n_levels=4, max_resolution=64,
+                            log2_table_density=12, log2_table_color=10)
+    trainer_cfg = TrainerConfig(
+        n_rays=128 if smoke else 256, render=render,
+        occ=occupancy.OccupancyConfig(update_interval=8, warmup_steps=8),
+        eval_chunk=hw * hw,
+    )
+
+    service = ReconstructionService(slice_iters=slice_iters)
+    datasets = {}
+    for i in range(scenes):
+        _scene, ds = build_dataset(seed=i, n_views=views, h=hw, w=hw,
+                                   cfg=render, gt_samples=48)
+        sid = service.submit_scene(ds, field_cfg, trainer_cfg,
+                                   target_iters=iters, seed=i)
+        datasets[sid] = ds
+
+    t_start = time.perf_counter()
+    ttfuv: dict[str, float | None] = {sid: None for sid in datasets}
+    psnr_trace: dict[str, list] = {sid: [] for sid in datasets}
+
+    def hook(svc, event):
+        sid = event["trained"]
+        if sid is not None:  # one render request per slice, per session
+            svc.request_render(sid, datasets[sid].poses[0])
+        for r in event["results"]:
+            psnr = float(losses.psnr(np.asarray(r.rgb),
+                                     datasets[r.session_id].images[0]))
+            psnr_trace[r.session_id].append((r.snapshot_step, psnr))
+            if ttfuv[r.session_id] is None and psnr >= psnr_threshold:
+                ttfuv[r.session_id] = time.perf_counter() - t_start
+
+    tel = service.run(hook=hook)
+
+    # parity: sequential single-scene training at equal iteration counts
+    psnr_interleaved, psnr_sequential = {}, {}
+    for i, (sid, ds) in enumerate(datasets.items()):
+        psnr_interleaved[sid] = service.sessions[sid].evaluate(views=[0])["psnr_rgb"]
+        tr = Instant3DTrainer(Field(field_cfg), trainer_cfg)
+        st = tr.init(jax.random.PRNGKey(i))
+        st, _ = tr.train(st, RaySampler(ds), iters=iters, log_every=iters)
+        psnr_sequential[sid] = tr.evaluate(st.params, ds, views=[0])["psnr_rgb"]
+    parity = max(abs(psnr_interleaved[s] - psnr_sequential[s]) for s in datasets)
+
+    lat = tel["render"]
+    out = {
+        "config": {
+            "smoke": smoke, "scenes": scenes, "iters_per_scene": iters,
+            "slice_iters": slice_iters, "hw": hw, "views": views,
+            "n_rays": trainer_cfg.n_rays, "n_samples": render.n_samples,
+            "psnr_threshold_db": psnr_threshold,
+        },
+        "wall_s": tel["wall_s"],
+        "scenes_per_sec": tel["scenes_per_sec"],
+        "render_latency_ms": {
+            "count": lat.get("count", 0),
+            "p50": lat.get("p50_ms"), "p95": lat.get("p95_ms"),
+            "max": lat.get("max_ms"),
+        },
+        "time_to_first_usable_view_s": ttfuv,
+        "psnr_trace": psnr_trace,
+        "parity": {
+            "interleaved_db": psnr_interleaved,
+            "sequential_db": psnr_sequential,
+            "max_abs_diff_db": parity,
+        },
+    }
+    with open("BENCH_serve3d.json", "w") as f:
+        json.dump(out, f, indent=2)
+
+    common.emit(
+        "serve3d_service",
+        tel["wall_s"] * 1e6 / max(1, scenes * iters),
+        f"scenes_per_sec={tel['scenes_per_sec']:.3f};"
+        f"p50_ms={lat.get('p50_ms', 0):.0f};p95_ms={lat.get('p95_ms', 0):.0f};"
+        f"parity_db={parity:.4f}",
+    )
+    for sid, t in ttfuv.items():
+        common.emit(f"serve3d_ttfuv[{sid}]", (t or 0.0) * 1e6,
+                    f"ttfuv_s={'%.2f' % t if t is not None else 'n/a'};"
+                    f"threshold_db={psnr_threshold}")
+    assert parity <= 0.1, (
+        f"interleaved vs sequential PSNR drifted {parity:.3f} dB (> 0.1)")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="2 sessions x few iters x 1 render/slice (CI gate)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

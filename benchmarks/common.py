@@ -57,6 +57,12 @@ def train_and_eval(field_cfg: FieldConfig, train_cfg: TrainerConfig, seed: int =
         "psnr_rgb": ev["psnr_rgb"],
         "psnr_depth": ev["psnr_depth"],
         "loss": hist["loss"],
+        # compaction telemetry (query budget interaction with the schedule)
+        "points_queried_last": hist["points_queried"][-1],
+        "points_queried_mean": float(np.mean(hist["points_queried"])),
+        "live_fraction_last": hist["live_fraction"][-1],
+        "overflow_total": hist["overflow_total"],
+        "overflow_steps": hist["overflow_steps"],
     }
 
 

@@ -33,6 +33,60 @@ from ..optim import AdamW
 # importing repro.data here would create a package cycle
 
 
+# ---- shared eval-render compile cache ----
+#
+# Keyed per (field config, render config, chunk size): concurrent scene
+# sessions with the *same* geometry share exactly one compiled function,
+# while sessions with different grid sizes get distinct entries instead of
+# silently thrashing (or worse, sharing) one trainer's cached jit.  The
+# function closes over a Field built from the config, so any caller holding
+# only configs (e.g. the serve3d RenderService) can use it too.
+_EVAL_RENDER_CACHE: dict[tuple, Any] = {}
+
+
+def make_render_chunk(field_cfg, render_cfg: rendering.RenderConfig):
+    """Unjitted dense-pipeline chunk renderer built purely from configs:
+    (params, origins (N,3), dirs (N,3), ts (N,S)) -> (rgb, depth).  The single
+    construction point for every eval-render cache (plain and vmapped), so
+    their entries always compute the same function."""
+    pipeline = RenderPipeline(field_lib.Field(field_cfg), render_cfg)
+
+    def render_chunk(params, origins, dirs, ts):
+        out = pipeline(params, origins, dirs, ts)
+        return out["rgb"], out["depth"]
+
+    return render_chunk
+
+
+def eval_render_fn(field_cfg, render_cfg: rendering.RenderConfig, chunk: int):
+    """Jitted `make_render_chunk` for (field_cfg, render_cfg, chunk)."""
+    key = (field_cfg, render_cfg, int(chunk))
+    if key not in _EVAL_RENDER_CACHE:
+        _EVAL_RENDER_CACHE[key] = jax.jit(make_render_chunk(field_cfg, render_cfg))
+    return _EVAL_RENDER_CACHE[key]
+
+
+def image_rays(pose, h: int, w: int, focal: float, eval_chunk: int):
+    """Full-image rays padded to a chunk quantum.
+
+    Returns (origins, dirs, n, chunk) with origins/dirs of length
+    ceil(n/chunk)*chunk — the padding repeats the last ray so dirs stay
+    unit-norm; callers trim to n.  Shared by `render_image` and the serve3d
+    RenderService so both produce identical chunks (and hit the same
+    compile-cache entries)."""
+    py, px = jnp.meshgrid(jnp.arange(h), jnp.arange(w), indexing="ij")
+    o, d = rendering.pixel_rays(
+        jnp.asarray(pose), px.reshape(-1), py.reshape(-1), h, w, focal
+    )
+    n = h * w
+    chunk = min(int(eval_chunk), n)
+    pad = (-n) % chunk
+    if pad:
+        o = jnp.concatenate([o, jnp.broadcast_to(o[-1:], (pad, 3))])
+        d = jnp.concatenate([d, jnp.broadcast_to(d[-1:], (pad, 3))])
+    return o, d, n, chunk
+
+
 @dataclass(frozen=True)
 class TrainerConfig:
     n_rays: int = 1024
@@ -85,10 +139,14 @@ class Instant3DTrainer:
         )
         self.pipeline = RenderPipeline(field, cfg.render)
         self._step_fns = {}
-        self._eval_render = None
         # host-side live-fraction estimate driving the compaction budget;
         # starts at 1.0 (occupancy warmup = all-occupied => dense)
         self._live_frac = 1.0
+        # rolling per-step overflow scalars (device) feeding the budget-widening
+        # check; kept on the instance (not per train() call) so time-sliced
+        # training — many short train() calls — widens exactly like one long
+        # sequential run regardless of where the slice boundaries fall
+        self._overflow_window: list = []
 
     # ---- state ----
 
@@ -201,6 +259,7 @@ class Instant3DTrainer:
         occ_updates = int(occ_state.step) if cfg.use_occupancy else 0
         if occ_updates == 0:
             self._live_frac = 1.0  # fresh state: forget any previous run
+            self._overflow_window = []
         for local_i in range(iters):
             i = state.step + local_i
             key_batch, key_ts, key_occ = jax.random.split(jax.random.fold_in(key, i), 3)
@@ -220,6 +279,8 @@ class Instant3DTrainer:
                 params, opt_state, batch, ts, occ_state.density_ema
             )
             overflow_accum.append(aux["overflow"])
+            self._overflow_window.append(aux["overflow"])
+            del self._overflow_window[: -cfg.occ.update_interval]
 
             if cfg.use_occupancy and i >= cfg.occ.warmup_steps and (i + 1) % cfg.occ.update_interval == 0:
                 occ_state = occupancy.update(self.field, params, occ_state, cfg.occ, key_occ)
@@ -232,9 +293,11 @@ class Instant3DTrainer:
                 if use_bits:
                     measured = float(aux["live_fraction"])
                     # consider every step since the last update, not just this
-                    # one — per-step live counts fluctuate with stratified ts
-                    recent = overflow_accum[-cfg.occ.update_interval:]
-                    if int(jnp.sum(jnp.stack(recent))) > 0:
+                    # one — per-step live counts fluctuate with stratified ts.
+                    # The window lives on the instance so it spans train()
+                    # calls (time-sliced sessions see the same history).
+                    recent = self._overflow_window[-cfg.occ.update_interval:]
+                    if recent and int(jnp.sum(jnp.stack(recent))) > 0:
                         measured = min(1.0, measured * 2.0)
                     self._live_frac = measured
 
@@ -257,39 +320,55 @@ class Instant3DTrainer:
             history["overflow_steps"] = 0
         return TrainState(params, opt_state, occ_state, state.step + iters), history
 
+    # ---- suspend / resume (host-state hooks for time-sliced sessions) ----
+
+    def suspend(self, state: TrainState) -> dict:
+        """Device -> host snapshot of everything needed to continue
+        bit-identically: model/optimizer/occupancy state plus the trainer's
+        host-side compaction bookkeeping (live fraction + overflow window).
+        The returned flat-keyed dict is exactly what `CheckpointManager.save`
+        expects, and `resume` (or `suspend` of a fresh `init` state, as a
+        restore template) round-trips it."""
+        win = np.zeros((self.cfg.occ.update_interval,), np.int32)
+        recent = [int(x) for x in self._overflow_window[-len(win):]]
+        if recent:
+            win[-len(recent):] = recent
+        return {
+            "params": jax.device_get(state.params),
+            "opt": jax.device_get(state.opt_state),
+            "occ_ema": np.asarray(state.occ_state.density_ema),
+            "occ_step": np.asarray(state.occ_state.step),
+            "step": np.asarray(state.step, np.int32),
+            "live_frac": np.asarray(self._live_frac, np.float32),
+            "overflow_window": win,
+        }
+
+    def resume(self, tree: dict) -> TrainState:
+        """Inverse of `suspend`: restore host state onto the device and
+        re-seed the trainer's compaction bookkeeping."""
+        self._live_frac = float(tree["live_frac"])
+        self._overflow_window = [
+            jnp.asarray(v, jnp.int32) for v in np.asarray(tree["overflow_window"])
+        ]
+        return TrainState(
+            params=jax.tree.map(jnp.asarray, tree["params"]),
+            opt_state=jax.tree.map(jnp.asarray, tree["opt"]),
+            occ_state=occupancy.OccupancyState(
+                jnp.asarray(tree["occ_ema"]), jnp.asarray(tree["occ_step"], jnp.int32)
+            ),
+            step=int(tree["step"]),
+        )
+
     # ---- evaluation ----
-
-    def _eval_render_fn(self):
-        """Jitted dense-pipeline chunk renderer; every chunk is padded to the
-        same (eval_chunk, n_samples) shape so exactly one compile happens
-        regardless of image size."""
-        if self._eval_render is None:
-            pipeline = self.pipeline
-
-            def render_chunk(params, origins, dirs, ts):
-                out = pipeline(params, origins, dirs, ts)
-                return out["rgb"], out["depth"]
-
-            self._eval_render = jax.jit(render_chunk)
-        return self._eval_render
 
     def render_image(self, params, pose: np.ndarray, ds):
         cfg = self.cfg
         h, w = ds.h, ds.w
-        py, px = jnp.meshgrid(jnp.arange(h), jnp.arange(w), indexing="ij")
-        o, d = rendering.pixel_rays(
-            jnp.asarray(pose), px.reshape(-1), py.reshape(-1), h, w, ds.focal
-        )
-        n = h * w
-        chunk = min(cfg.eval_chunk, n)
-        pad = (-n) % chunk
-        if pad:  # repeat the last ray: keeps dirs unit-norm, trimmed below
-            o = jnp.concatenate([o, jnp.broadcast_to(o[-1:], (pad, 3))])
-            d = jnp.concatenate([d, jnp.broadcast_to(d[-1:], (pad, 3))])
+        o, d, n, chunk = image_rays(pose, h, w, ds.focal, cfg.eval_chunk)
         ts = rendering.sample_ts(None, chunk, cfg.render)
-        fn = self._eval_render_fn()
+        fn = eval_render_fn(self.field.cfg, cfg.render, chunk)
         rgb_out, dep_out = [], []
-        for i in range(0, n + pad, chunk):
+        for i in range(0, o.shape[0], chunk):
             rgb_c, dep_c = fn(params, o[i : i + chunk], d[i : i + chunk], ts)
             rgb_out.append(rgb_c)
             dep_out.append(dep_c)

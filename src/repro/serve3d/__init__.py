@@ -1,0 +1,9 @@
+"""serve3d — multi-scene reconstruction service (Instant-3D as a service
+primitive: accept scene jobs, time-slice the device across concurrent
+training sessions, serve batched novel-view renders from published
+snapshots while training continues)."""
+from .session import SceneSession, PENDING, ACTIVE, SUSPENDED, DONE  # noqa: F401
+from .scheduler import SessionScheduler  # noqa: F401
+from .snapshot import Snapshot, SnapshotStore  # noqa: F401
+from .render import RenderRequest, RenderResult, RenderService, batched_render_fn  # noqa: F401
+from .service import ReconstructionService  # noqa: F401

@@ -1,0 +1,215 @@
+"""RenderService: batched novel-view rendering across concurrent sessions.
+
+Requests target a *session* (scene), not a parameter blob: the service
+resolves each request against the session's latest published snapshot at
+drain time, so renders always see a consistent, fully-trained-up-to-step-N
+view while training continues on the live buffers.
+
+Coalescing: pending requests are grouped by (field config, render config,
+image geometry); each group stacks the per-session snapshot params into one
+leading batch axis and renders through a jitted ``vmap`` of the *same*
+fixed-chunk dense-pipeline renderer that ``Instant3DTrainer.render_image``
+uses (both are built by ``repro.core.trainer.make_render_chunk``; this
+module's cache adds the padded group size to the per-(field config, render
+config, chunk) key).  Group sizes are bucketed to powers of two (padding
+repeats the last request) so the number of distinct compiled batch shapes
+stays O(log N) per geometry.
+
+A request whose session has not published a snapshot yet stays queued — the
+train -> snapshot -> serve pipeline never renders from uninitialized or
+half-written params.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field as dc_field
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import rendering
+from ..core.trainer import image_rays, make_render_chunk
+from .snapshot import SnapshotStore
+
+# vmapped-over-sessions flavor of the trainer's eval renderer: same
+# make_render_chunk construction, keyed the same way plus the padded group
+# size, so sessions with different grid sizes can never share an entry
+_BATCH_RENDER_CACHE: dict[tuple, Any] = {}
+
+
+def batched_render_fn(field_cfg, render_cfg: rendering.RenderConfig,
+                      chunk: int, group: int):
+    """(params stacked over G, origins (G,chunk,3), dirs (G,chunk,3),
+    ts (chunk,S)) -> (rgb (G,chunk,3), depth (G,chunk))."""
+    key = (field_cfg, render_cfg, int(chunk), int(group))
+    if key not in _BATCH_RENDER_CACHE:
+        _BATCH_RENDER_CACHE[key] = jax.jit(
+            jax.vmap(make_render_chunk(field_cfg, render_cfg),
+                     in_axes=(0, 0, 0, None))
+        )
+    return _BATCH_RENDER_CACHE[key]
+
+
+def _pow2_bucket(n: int) -> int:
+    return 1 << (n - 1).bit_length()
+
+
+@dataclass
+class _SessionGeom:
+    field_cfg: Any
+    render_cfg: rendering.RenderConfig
+    h: int
+    w: int
+    focal: float
+    eval_chunk: int
+
+
+@dataclass
+class RenderRequest:
+    request_id: int
+    session_id: str
+    pose: np.ndarray
+    submitted_at: float = dc_field(default_factory=time.perf_counter)
+
+
+class RenderResult(NamedTuple):
+    request_id: int
+    session_id: str
+    rgb: np.ndarray       # (H, W, 3)
+    depth: np.ndarray     # (H, W)
+    snapshot_version: int
+    snapshot_step: int
+    latency_s: float
+
+
+class RenderService:
+    def __init__(self, store: SnapshotStore, latency_window: int = 4096):
+        self.store = store
+        self._geom: dict[str, _SessionGeom] = {}
+        self._queue: list[RenderRequest] = []
+        self._next_id = 0
+        # per-session serving telemetry; the latency window is bounded so a
+        # long-lived service (jobs accepted continuously) doesn't grow it
+        # per-request forever — percentiles come from the recent window.
+        # (The compile caches are keyed by config/chunk/pow2-group, not by
+        # session, so their size is bounded by config diversity.)
+        self.latency_window = int(latency_window)
+        self.latencies: dict[str, deque] = {}
+        self.served: dict[str, int] = {}
+
+    # ---- registration / submission ----
+
+    def register_session(self, session_id: str, field_cfg, render_cfg,
+                         h: int, w: int, focal: float, eval_chunk: int = 4096):
+        self._geom[session_id] = _SessionGeom(
+            field_cfg, render_cfg, int(h), int(w), float(focal), int(eval_chunk)
+        )
+
+    def submit(self, session_id: str, pose: np.ndarray) -> int:
+        if session_id not in self._geom:
+            raise KeyError(f"unknown session {session_id!r}")
+        req = RenderRequest(self._next_id, session_id, np.asarray(pose))
+        self._next_id += 1
+        self._queue.append(req)
+        return req.request_id
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # ---- serving ----
+
+    def drain(self) -> list[RenderResult]:
+        """Serve every pending request whose session has a published
+        snapshot; requests without one stay queued for the next drain."""
+        ready: list[tuple[RenderRequest, Any]] = []
+        waiting: list[RenderRequest] = []
+        for req in self._queue:
+            snap = self.store.latest(req.session_id)
+            if snap is None:
+                waiting.append(req)
+            else:
+                ready.append((req, snap))
+        self._queue = waiting
+
+        # coalesce by compiled geometry: same field/render config + image dims
+        groups: dict[tuple, list[tuple[RenderRequest, Any]]] = {}
+        for req, snap in ready:
+            g = self._geom[req.session_id]
+            key = (g.field_cfg, g.render_cfg, g.h, g.w, g.focal, g.eval_chunk)
+            groups.setdefault(key, []).append((req, snap))
+
+        results = []
+        for (field_cfg, render_cfg, h, w, focal, eval_chunk), items in groups.items():
+            results.extend(
+                self._render_group(field_cfg, render_cfg, h, w, focal,
+                                   eval_chunk, items)
+            )
+        results.sort(key=lambda r: r.request_id)
+        return results
+
+    def _render_group(self, field_cfg, render_cfg, h, w, focal, eval_chunk,
+                      items) -> list[RenderResult]:
+        g_real = len(items)
+        g_pad = _pow2_bucket(g_real)
+        padded = items + [items[-1]] * (g_pad - g_real)
+
+        origins, dirs = [], []
+        n = chunk = None
+        for req, _snap in padded:
+            o, d, n, chunk = image_rays(req.pose, h, w, focal, eval_chunk)
+            origins.append(o)
+            dirs.append(d)
+        origins = jnp.stack(origins)   # (G, n_pad, 3)
+        dirs = jnp.stack(dirs)
+        params = jax.tree.map(
+            lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
+            *[snap.params for _req, snap in padded],
+        )
+        ts = rendering.sample_ts(None, chunk, render_cfg)
+        fn = batched_render_fn(field_cfg, render_cfg, chunk, g_pad)
+
+        rgb_chunks, dep_chunks = [], []
+        for i in range(0, origins.shape[1], chunk):
+            rgb_c, dep_c = fn(params, origins[:, i:i + chunk], dirs[:, i:i + chunk], ts)
+            rgb_chunks.append(rgb_c)
+            dep_chunks.append(dep_c)
+        rgb = np.asarray(jnp.concatenate(rgb_chunks, axis=1))[:, :n]
+        dep = np.asarray(jnp.concatenate(dep_chunks, axis=1))[:, :n]
+
+        now = time.perf_counter()
+        out = []
+        for gi, (req, snap) in enumerate(items):
+            lat = now - req.submitted_at
+            self.latencies.setdefault(
+                req.session_id, deque(maxlen=self.latency_window)).append(lat)
+            self.served[req.session_id] = self.served.get(req.session_id, 0) + 1
+            out.append(RenderResult(
+                request_id=req.request_id,
+                session_id=req.session_id,
+                rgb=rgb[gi].reshape(h, w, 3),
+                depth=dep[gi].reshape(h, w),
+                snapshot_version=snap.version,
+                snapshot_step=snap.step,
+                latency_s=lat,
+            ))
+        return out
+
+    # ---- telemetry ----
+
+    def latency_stats(self) -> dict:
+        """Percentiles over the recent latency window; counts are lifetime."""
+        all_lat = sorted(l for ls in self.latencies.values() for l in ls)
+        if not all_lat:
+            return {"count": 0}
+        pct = lambda p: all_lat[min(len(all_lat) - 1, int(p * len(all_lat)))]
+        return {
+            "count": sum(self.served.values()),
+            "p50_ms": pct(0.50) * 1e3,
+            "p95_ms": pct(0.95) * 1e3,
+            "max_ms": all_lat[-1] * 1e3,
+            "per_session": dict(self.served),
+        }

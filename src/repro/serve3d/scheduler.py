@@ -1,0 +1,111 @@
+"""Session scheduler: time-slice one device across many training sessions.
+
+Two policies over the resident set:
+
+* ``round_robin`` (default) — fair rotation; every live session advances by
+  one slice per cycle, so concurrent scenes progress at the same
+  iterations/sec and an interleaved run matches sequential training at
+  equal per-scene iteration counts.
+* ``edf`` — earliest-deadline-first; sessions carry an absolute deadline
+  (seconds since submission) and the most urgent live session trains next.
+  Ties (or sessions without deadlines) fall back to round-robin order.
+
+Residency reuses the continuous-batching slot-reset idiom from
+``repro.launch.serve``: at most ``max_resident`` sessions hold device state
+at once (a "slot"), the rest queue as pending.  When a resident session
+completes, its slot is reset — the next queued session is admitted
+(``start`` for fresh jobs, ``resume`` for suspended ones) exactly like a
+finished decode sequence being replaced by the next request.  The default
+slice length is a multiple of the occupancy update interval so budget
+re-measurement happens at the same absolute steps as in a sequential run.
+"""
+from __future__ import annotations
+
+from .session import ACTIVE, DONE, PENDING, SUSPENDED, SceneSession
+
+
+class SessionScheduler:
+    def __init__(self, slice_iters: int = 16, policy: str = "round_robin",
+                 max_resident: int | None = None):
+        if policy not in ("round_robin", "edf"):
+            raise ValueError(f"unknown policy {policy!r}")
+        self.slice_iters = int(slice_iters)
+        self.policy = policy
+        self.max_resident = max_resident
+        self.sessions: list[SceneSession] = []
+        self._rr = 0  # round-robin cursor
+
+    # ---- membership ----
+
+    def add(self, session: SceneSession):
+        self.sessions.append(session)
+        self._admit()
+
+    def live(self) -> list[SceneSession]:
+        return [s for s in self.sessions if s.status != DONE]
+
+    @property
+    def all_done(self) -> bool:
+        return not self.live()
+
+    # ---- slot admission (continuous-batching idiom) ----
+
+    def _resident_count(self) -> int:
+        return sum(1 for s in self.sessions if s.resident and s.status != DONE)
+
+    def _admit(self):
+        """Fill free slots with queued sessions: submission order under
+        round-robin, most-urgent-first under EDF.  Residents are never
+        preempted — EDF governs admission of queued jobs and selection among
+        active ones, not eviction."""
+        cap = self.max_resident if self.max_resident is not None else len(self.sessions)
+        queued = [s for s in self.sessions if s.status in (PENDING, SUSPENDED)]
+        if self.policy == "edf":
+            queued.sort(key=lambda s: (s.deadline is None,
+                                       (s.submitted_at + s.deadline)
+                                       if s.deadline is not None else 0.0))
+        for s in queued:
+            if self._resident_count() >= cap:
+                break
+            if s.status == PENDING:
+                s.start()
+            else:
+                s.resume()
+
+    # ---- selection ----
+
+    def next_session(self) -> SceneSession | None:
+        """Pick the session to train next; None when everything is done."""
+        self._admit()
+        live = [s for s in self.sessions if s.status == ACTIVE]
+        if not live:
+            return None
+        if self.policy == "edf":
+            with_deadline = [s for s in live if s.deadline is not None]
+            if with_deadline:
+                return min(
+                    with_deadline, key=lambda s: s.submitted_at + s.deadline
+                )
+        # fair rotation over the stable session list
+        for _ in range(len(self.sessions)):
+            s = self.sessions[self._rr % len(self.sessions)]
+            self._rr += 1
+            if s.status == ACTIVE:
+                return s
+        return live[0]
+
+    def step(self) -> SceneSession | None:
+        """Run one scheduling quantum: pick a session, train one slice,
+        reset its slot (admit the next queued job) if it finished."""
+        s = self.next_session()
+        if s is None:
+            return None
+        s.run_slice(self.slice_iters)
+        if s.status == DONE:
+            if self.max_resident is not None and s.resident:
+                # bounded residency: a finished job must actually release its
+                # device footprint, not just stop counting against the cap
+                # (publish/evaluate still work from the suspended host tree)
+                s.suspend(block=False)
+            self._admit()  # slot reset: finished job's slot goes to the queue
+        return s

@@ -1,0 +1,132 @@
+"""ReconstructionService: the serve3d facade.
+
+One object owns the train -> snapshot -> serve loop:
+
+    service = ReconstructionService(slice_iters=16)
+    sid = service.submit_scene(dataset, field_cfg, trainer_cfg, target_iters=256)
+    service.request_render(sid, pose)            # answered mid-training
+    telemetry = service.run()
+
+Each `step()` is one scheduling quantum: the scheduler picks a live session
+(round-robin or EDF), trains one slice, publishes its params to the snapshot
+store (atomic swap), then the render service drains every answerable request
+— coalescing same-geometry requests across sessions into batched jitted
+renders.  Renders therefore always observe a consistent published snapshot
+while training keeps mutating the live (donated) buffers.
+"""
+from __future__ import annotations
+
+import time
+
+from .render import RenderService
+from .scheduler import SessionScheduler
+from .session import DONE, SceneSession
+from .snapshot import SnapshotStore
+
+
+class ReconstructionService:
+    def __init__(
+        self,
+        slice_iters: int = 16,
+        policy: str = "round_robin",
+        max_resident: int | None = None,
+        persist_dir: str | None = None,
+        snapshot_every: int = 1,
+    ):
+        """snapshot_every: publish a session's snapshot every k-th slice it
+        trains (its final slice always publishes)."""
+        self.store = SnapshotStore(persist_dir=persist_dir)
+        self.renderer = RenderService(self.store)
+        self.scheduler = SessionScheduler(
+            slice_iters=slice_iters, policy=policy, max_resident=max_resident
+        )
+        self.sessions: dict[str, SceneSession] = {}
+        self.snapshot_every = max(1, int(snapshot_every))
+        # serving clock starts at the first quantum, not construction, so
+        # dataset/scene setup between submit and run is not billed as
+        # service time in scenes_per_sec
+        self._started_at: float | None = None
+
+    # ---- job submission ----
+
+    def submit_scene(
+        self,
+        dataset,
+        field_cfg,
+        trainer_cfg,
+        target_iters: int,
+        *,
+        session_id: str | None = None,
+        seed: int = 0,
+        deadline: float | None = None,
+        ckpt_dir: str | None = None,
+    ) -> str:
+        sid = session_id if session_id is not None else f"scene-{len(self.sessions):03d}"
+        if sid in self.sessions:
+            raise ValueError(f"duplicate session id {sid!r}")
+        sess = SceneSession(
+            sid, dataset, field_cfg, trainer_cfg, target_iters,
+            seed=seed, ckpt_dir=ckpt_dir, deadline=deadline,
+        )
+        self.sessions[sid] = sess
+        self.scheduler.add(sess)
+        self.renderer.register_session(
+            sid, field_cfg, trainer_cfg.render,
+            dataset.h, dataset.w, dataset.focal, trainer_cfg.eval_chunk,
+        )
+        return sid
+
+    def request_render(self, session_id: str, pose) -> int:
+        return self.renderer.submit(session_id, pose)
+
+    # ---- the serving loop ----
+
+    def step(self) -> dict:
+        """One quantum: train one slice, publish, drain renders."""
+        if self._started_at is None:
+            self._started_at = time.perf_counter()
+        sess = self.scheduler.step()
+        if sess is not None:
+            slices = len(sess.telemetry["step"])
+            # a finished session may already be suspended (bounded residency)
+            # — publish still works from its host tree
+            if sess.status == DONE or slices % self.snapshot_every == 0:
+                sess.publish(self.store)
+        results = self.renderer.drain()
+        return {
+            "trained": sess.session_id if sess is not None else None,
+            "step": sess.step if sess is not None else None,
+            "results": results,
+        }
+
+    def run(self, hook=None, max_quanta: int = 100_000) -> dict:
+        """Drive quanta until every session is done and the render queue is
+        empty.  `hook(service, event)` runs after each quantum — the place to
+        submit mid-training render requests or stream telemetry."""
+        for _ in range(max_quanta):
+            if self.scheduler.all_done and self.renderer.pending == 0:
+                break
+            # step() drains even once training is done, so straggler requests
+            # still flow through the hook as ordinary events
+            event = self.step()
+            if hook is not None:
+                hook(self, event)
+        self.store.wait()
+        return self.telemetry()
+
+    # ---- telemetry ----
+
+    def progress(self) -> list[dict]:
+        return [s.progress() for s in self.sessions.values()]
+
+    def telemetry(self) -> dict:
+        done = [s for s in self.sessions.values() if s.status == DONE]
+        now = time.perf_counter()
+        wall = now - (self._started_at if self._started_at is not None else now)
+        return {
+            "wall_s": wall,
+            "scenes_done": len(done),
+            "scenes_per_sec": len(done) / wall if wall > 0 else 0.0,
+            "sessions": self.progress(),
+            "render": self.renderer.latency_stats(),
+        }

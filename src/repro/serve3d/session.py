@@ -1,0 +1,174 @@
+"""SceneSession: one scene's reconstruction job as a schedulable unit.
+
+Wraps `Instant3DTrainer` + occupancy state + `CheckpointManager` behind a
+suspend/resume lifecycle so N sessions can time-share one device:
+
+    pending --start()--> active --run_slice(n)*--> done
+                 ^            |
+                 '--resume()--'--suspend()--> suspended
+
+`run_slice` advances training by a bounded number of iterations and returns;
+the scheduler interleaves slices across sessions.  Training streams are
+keyed by *absolute* step (the trainer folds the iteration index into its
+PRNG), and the trainer's compaction bookkeeping survives suspend/resume, so
+an interleaved schedule reproduces sequential single-scene training
+bit-for-bit at equal per-scene iteration counts.
+
+`suspend` moves the full training state (params, optimizer moments,
+occupancy EMA + fold count, compaction bookkeeping) to host memory — and,
+when a checkpoint dir is configured, to disk via the atomic commit protocol
+— releasing the device footprint for other sessions.  `resume` restores
+from the in-memory tree when present, else from the latest valid on-disk
+checkpoint (the fresh-process path).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any
+
+import jax
+
+from ..checkpoint import CheckpointManager
+from ..core import field as field_lib
+from ..core.trainer import Instant3DTrainer, TrainerConfig, TrainState
+from ..data import RaySampler
+
+PENDING = "pending"
+ACTIVE = "active"
+SUSPENDED = "suspended"
+DONE = "done"
+
+
+class SceneSession:
+    def __init__(
+        self,
+        session_id: str,
+        dataset,
+        field_cfg: field_lib.FieldConfig,
+        trainer_cfg: TrainerConfig,
+        target_iters: int,
+        *,
+        seed: int = 0,
+        ckpt_dir: str | None = None,
+        deadline: float | None = None,
+    ):
+        self.session_id = session_id
+        self.dataset = dataset
+        self.field_cfg = field_cfg
+        self.trainer_cfg = trainer_cfg
+        self.target_iters = int(target_iters)
+        self.seed = seed
+        self.deadline = deadline  # seconds-since-submit budget for EDF scheduling
+        self.field = field_lib.Field(field_cfg)
+        self.trainer = Instant3DTrainer(self.field, trainer_cfg)
+        self.sampler = RaySampler(dataset)
+        self.ckpt = CheckpointManager(ckpt_dir, keep_last=2) if ckpt_dir else None
+        self.state: TrainState | None = None
+        self._host_tree: dict | None = None
+        self.status = PENDING
+        self.submitted_at = time.perf_counter()
+        self.train_wall_s = 0.0
+        self.telemetry: dict[str, list] = {"step": [], "loss": [], "live_fraction": []}
+
+    # ---- lifecycle ----
+
+    @property
+    def step(self) -> int:
+        if self.state is not None:
+            return self.state.step
+        if self._host_tree is not None:
+            return int(self._host_tree["step"])
+        return 0
+
+    @property
+    def done(self) -> bool:
+        return self.step >= self.target_iters
+
+    @property
+    def resident(self) -> bool:
+        """Whether the session currently holds device state."""
+        return self.state is not None
+
+    def start(self):
+        assert self.status == PENDING, f"cannot start from {self.status}"
+        self.state = self.trainer.init(jax.random.PRNGKey(self.seed))
+        self.status = ACTIVE
+
+    def run_slice(self, n_iters: int) -> dict:
+        """Advance training by up to `n_iters` iterations (one time slice)."""
+        assert self.status == ACTIVE, f"cannot train a {self.status} session"
+        n = min(int(n_iters), self.target_iters - self.step)
+        if n <= 0:
+            self.status = DONE
+            return {}
+        t0 = time.perf_counter()
+        self.state, hist = self.trainer.train(
+            self.state, self.sampler, iters=n, log_every=n
+        )
+        self.train_wall_s += time.perf_counter() - t0
+        self.telemetry["step"].append(self.step)
+        self.telemetry["loss"].append(hist["loss"][-1])
+        self.telemetry["live_fraction"].append(hist["live_fraction"][-1])
+        if self.done:
+            self.status = DONE
+        return hist
+
+    # ---- suspend / resume ----
+
+    def suspend(self, block: bool = True):
+        """Offload the full training state to host (and disk if configured)."""
+        assert self.state is not None, "no device state to suspend"
+        self._host_tree = self.trainer.suspend(self.state)
+        if self.ckpt is not None:
+            self.ckpt.save(self.step, self._host_tree, block=block)
+        self.state = None
+        if self.status == ACTIVE:
+            self.status = SUSPENDED
+
+    def resume(self):
+        """Restore device state from the in-memory tree or the latest valid
+        on-disk checkpoint (fresh-process path)."""
+        assert self.state is None, "already resident"
+        tree = self._host_tree
+        if tree is None:
+            if self.ckpt is None:
+                raise RuntimeError(f"{self.session_id}: nothing to resume from")
+            template = self.trainer.suspend(
+                self.trainer.init(jax.random.PRNGKey(self.seed))
+            )
+            tree, _meta = self.ckpt.restore(template)
+        self.state = self.trainer.resume(tree)
+        self._host_tree = None
+        self.status = DONE if self.done else ACTIVE
+
+    # ---- serving hooks ----
+
+    def _current_params(self):
+        """Latest params, resident or suspended (host tree)."""
+        if self.state is not None:
+            return self.state.params
+        if self._host_tree is not None:
+            return self._host_tree["params"]
+        raise RuntimeError(f"{self.session_id}: no trained state yet")
+
+    def publish(self, store) -> "Any":
+        """Publish current params to a SnapshotStore (atomic swap)."""
+        meta = {
+            "loss": float(self.telemetry["loss"][-1]) if self.telemetry["loss"] else None,
+            "train_wall_s": self.train_wall_s,
+        }
+        return store.publish(self.session_id, self._current_params(), self.step, meta)
+
+    def evaluate(self, views=None) -> dict:
+        """PSNR of the *current* params against this session's ground truth."""
+        return self.trainer.evaluate(self._current_params(), self.dataset, views=views)
+
+    def progress(self) -> dict:
+        return {
+            "session_id": self.session_id,
+            "status": self.status,
+            "step": self.step,
+            "target_iters": self.target_iters,
+            "loss": self.telemetry["loss"][-1] if self.telemetry["loss"] else None,
+            "train_wall_s": self.train_wall_s,
+        }

@@ -1,0 +1,75 @@
+"""Snapshot store: atomic publish of live training params for rendering.
+
+The serving contract is train -> snapshot -> serve: render requests never
+read a session's live (donated, in-flight) training buffers — they read the
+last *published* snapshot, an immutable host-side copy.  Publish builds the
+complete record first and then swaps one dict slot under a lock, so a reader
+always sees either the previous or the new snapshot, never a torn mix of
+params from one step and metadata from another.
+
+With `persist_dir` set, each publish also lands in a per-session
+`CheckpointManager` directory (atomic tmp+rename commit protocol), so a
+service restart can re-serve every scene's latest published view without
+retraining.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, NamedTuple
+
+import jax
+
+from ..checkpoint import CheckpointManager
+
+
+class Snapshot(NamedTuple):
+    session_id: str
+    version: int        # monotonically increasing per session, starts at 1
+    step: int           # training step the params were taken at
+    params: Any         # host-side (numpy) param pytree — immutable by contract
+    meta: dict
+
+
+class SnapshotStore:
+    def __init__(self, persist_dir: str | None = None, keep_last: int = 2):
+        self._latest: dict[str, Snapshot] = {}
+        self._lock = threading.Lock()
+        self.persist_dir = persist_dir
+        self.keep_last = keep_last
+        self._ckpts: dict[str, CheckpointManager] = {}
+
+    def publish(self, session_id: str, params, step: int, meta: dict | None = None) -> Snapshot:
+        """Copy params to host and atomically make them the session's latest."""
+        host = jax.device_get(params)
+        with self._lock:
+            prev = self._latest.get(session_id)
+            snap = Snapshot(
+                session_id=session_id,
+                version=(prev.version + 1) if prev else 1,
+                step=int(step),
+                params=host,
+                meta=dict(meta or {}),
+            )
+            self._latest[session_id] = snap
+        if self.persist_dir is not None:
+            ckpt = self._ckpts.get(session_id)
+            if ckpt is None:
+                ckpt = self._ckpts[session_id] = CheckpointManager(
+                    f"{self.persist_dir}/{session_id}", keep_last=self.keep_last
+                )
+            ckpt.save(snap.step, {"params": host},
+                      extra={"version": snap.version, **snap.meta})
+        return snap
+
+    def latest(self, session_id: str) -> Snapshot | None:
+        with self._lock:
+            return self._latest.get(session_id)
+
+    def sessions(self) -> list[str]:
+        with self._lock:
+            return sorted(self._latest)
+
+    def wait(self):
+        """Block until all in-flight persisted writes are committed."""
+        for ckpt in self._ckpts.values():
+            ckpt.wait()

@@ -1,0 +1,259 @@
+"""serve3d: session lifecycle, scheduling parity, snapshots, batched renders."""
+import numpy as np
+import jax
+import pytest
+
+from repro.core import Field, FieldConfig, Instant3DTrainer, TrainerConfig, occupancy
+from repro.core import trainer as trainer_mod
+from repro.core.rendering import RenderConfig
+from repro.data import build_dataset, RaySampler
+from repro.serve3d import (
+    ACTIVE, DONE, PENDING, SUSPENDED,
+    ReconstructionService, SceneSession, SessionScheduler, SnapshotStore,
+)
+
+RCFG = RenderConfig(n_samples=8)
+FIELD_CFG = FieldConfig(n_levels=2, max_resolution=32, log2_table_density=10,
+                        log2_table_color=8, hidden=16)
+OCFG = occupancy.OccupancyConfig(resolution=16, update_interval=4, warmup_steps=2)
+TRAIN_CFG = TrainerConfig(n_rays=64, render=RCFG, occ=OCFG, eval_chunk=144)
+
+
+@pytest.fixture(scope="module")
+def datasets():
+    out = []
+    for seed in range(2):
+        _scene, ds = build_dataset(seed=seed, n_views=2, h=12, w=12,
+                                   cfg=RCFG, gt_samples=24)
+        out.append(ds)
+    return out
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+# ---- SceneSession lifecycle ----
+
+
+def test_session_suspend_snapshot_resume_bit_identical(datasets, tmp_path):
+    """Checkpoint round-trip of decomposed field params + occupancy EMA
+    through suspend -> snapshot -> resume: renders must be bit-identical."""
+    ds = datasets[0]
+    sess = SceneSession("s0", ds, FIELD_CFG, TRAIN_CFG, target_iters=32,
+                        ckpt_dir=str(tmp_path / "ckpt"))
+    sess.start()
+    sess.run_slice(12)  # past warmup: occupancy EMA has folded real updates
+    assert int(sess.state.occ_state.step) > 0
+
+    img_before, dep_before = sess.trainer.render_image(
+        sess.state.params, ds.poses[0], ds)
+    ema_before = np.asarray(sess.state.occ_state.density_ema)
+    occ_step_before = int(sess.state.occ_state.step)
+
+    sess.suspend(block=True)
+    assert sess.status == SUSPENDED and not sess.resident
+
+    # fresh-process path: a brand-new session object restores from disk only
+    sess2 = SceneSession("s0", ds, FIELD_CFG, TRAIN_CFG, target_iters=32,
+                         ckpt_dir=str(tmp_path / "ckpt"))
+    sess2._host_tree = None
+    sess2.resume()
+    assert sess2.status == ACTIVE and sess2.step == 12
+
+    np.testing.assert_array_equal(
+        np.asarray(sess2.state.occ_state.density_ema), ema_before)
+    assert int(sess2.state.occ_state.step) == occ_step_before
+    img_after, dep_after = sess2.trainer.render_image(
+        sess2.state.params, ds.poses[0], ds)
+    np.testing.assert_array_equal(img_after, img_before)
+    np.testing.assert_array_equal(dep_after, dep_before)
+
+    # and training continues identically to the never-suspended session
+    sess3 = SceneSession("s0-ref", ds, FIELD_CFG, TRAIN_CFG, target_iters=32)
+    sess3.start()
+    sess3.run_slice(12)
+    sess2.run_slice(8)
+    sess3.run_slice(8)
+    assert _leaves_equal(sess2.state.params, sess3.state.params)
+
+
+def test_interleaved_matches_sequential(datasets):
+    """Round-robin time-slicing reproduces sequential single-scene training
+    bit-for-bit at equal per-scene iteration counts."""
+    svc = ReconstructionService(slice_iters=4)
+    for seed, ds in enumerate(datasets):
+        svc.submit_scene(ds, FIELD_CFG, TRAIN_CFG, target_iters=16, seed=seed)
+    svc.run()
+
+    for seed, ds in enumerate(datasets):
+        tr = Instant3DTrainer(Field(FIELD_CFG), TRAIN_CFG)
+        st = tr.init(jax.random.PRNGKey(seed))
+        st, _ = tr.train(st, RaySampler(ds), iters=16, log_every=16)
+        sess = svc.sessions[f"scene-{seed:03d}"]
+        assert sess.status == DONE and sess.step == 16
+        assert _leaves_equal(st.params, sess.state.params), f"scene {seed}"
+
+
+def test_scheduler_round_robin_fair(datasets):
+    sched = SessionScheduler(slice_iters=4, policy="round_robin")
+    sessions = [
+        SceneSession(f"s{i}", datasets[i % 2], FIELD_CFG, TRAIN_CFG, target_iters=8)
+        for i in range(3)
+    ]
+    for s in sessions:
+        sched.add(s)
+    order = [sched.step().session_id for _ in range(6)]
+    assert order == ["s0", "s1", "s2", "s0", "s1", "s2"]
+    assert sched.all_done
+    assert sched.step() is None
+
+
+def test_scheduler_edf_prefers_urgent(datasets):
+    sched = SessionScheduler(slice_iters=4, policy="edf")
+    slack = SceneSession("slack", datasets[0], FIELD_CFG, TRAIN_CFG,
+                         target_iters=4, deadline=1e6)
+    urgent = SceneSession("urgent", datasets[1], FIELD_CFG, TRAIN_CFG,
+                          target_iters=4, deadline=1.0)
+    sched.add(slack)
+    sched.add(urgent)
+    assert sched.step().session_id == "urgent"
+    assert sched.step().session_id == "slack"
+
+
+def test_scheduler_edf_admission_order(datasets):
+    """With bounded slots, EDF admits the most urgent *queued* session when a
+    slot frees — not whichever was submitted first."""
+    sched = SessionScheduler(slice_iters=4, policy="edf", max_resident=1)
+    first = SceneSession("first", datasets[0], FIELD_CFG, TRAIN_CFG,
+                         target_iters=4, deadline=1e6)
+    lazy = SceneSession("lazy", datasets[1], FIELD_CFG, TRAIN_CFG,
+                        target_iters=4)             # no deadline
+    urgent = SceneSession("urgent", datasets[0], FIELD_CFG, TRAIN_CFG,
+                          target_iters=4, deadline=1.0)
+    for s in (first, lazy, urgent):                 # urgent submitted last
+        sched.add(s)
+    assert first.status == ACTIVE                   # residents not preempted
+    assert sched.step().session_id == "first"       # finishes its 4 iters
+    assert urgent.status == ACTIVE and lazy.status == PENDING
+    assert sched.step().session_id == "urgent"
+    assert sched.step().session_id == "lazy"
+    assert sched.all_done
+
+
+def test_scheduler_slot_reset_admission(datasets):
+    """Continuous-batching idiom: with one device slot, the queued session is
+    admitted exactly when the resident one finishes."""
+    sched = SessionScheduler(slice_iters=4, policy="round_robin", max_resident=1)
+    a = SceneSession("a", datasets[0], FIELD_CFG, TRAIN_CFG, target_iters=8)
+    b = SceneSession("b", datasets[1], FIELD_CFG, TRAIN_CFG, target_iters=4)
+    sched.add(a)
+    sched.add(b)
+    assert a.status == ACTIVE and b.status == PENDING  # only one slot
+    assert sched.step().session_id == "a"
+    assert b.status == PENDING                         # a still live
+    assert sched.step().session_id == "a"              # a finishes here
+    assert a.status == DONE and b.status == ACTIVE     # slot reset -> b admitted
+    assert not a.resident                              # device footprint released
+    assert a._current_params() is not None             # but still publishable
+    assert sched.step().session_id == "b"
+    assert sched.all_done
+
+
+# ---- SnapshotStore ----
+
+
+def test_snapshot_store_atomic_publish(datasets):
+    store = SnapshotStore()
+    sess = SceneSession("s0", datasets[0], FIELD_CFG, TRAIN_CFG, target_iters=8)
+    sess.start()
+    snap1 = sess.publish(store)
+    assert (snap1.version, snap1.step) == (1, 0)
+    sess.run_slice(4)
+    snap2 = sess.publish(store)
+    assert (snap2.version, snap2.step) == (2, 4)
+    assert store.latest("s0") is snap2           # pointer swap, newest wins
+    assert store.latest("missing") is None
+    assert store.sessions() == ["s0"]
+    # snapshots are host-side copies, decoupled from later training
+    assert not _leaves_equal(snap1.params, snap2.params)
+    sess.run_slice(4)
+    assert store.latest("s0") is snap2           # unaffected until next publish
+
+
+def test_snapshot_store_persistence_roundtrip(datasets, tmp_path):
+    store = SnapshotStore(persist_dir=str(tmp_path))
+    sess = SceneSession("sceneX", datasets[0], FIELD_CFG, TRAIN_CFG, target_iters=4)
+    sess.start()
+    sess.run_slice(4)
+    snap = sess.publish(store)
+    store.wait()
+    from repro.checkpoint import CheckpointManager
+    ckpt = CheckpointManager(tmp_path / "sceneX")
+    tree, meta = ckpt.restore({"params": snap.params})
+    assert meta["version"] == 1 and meta["step"] == 4
+    assert _leaves_equal(tree["params"], snap.params)
+
+
+# ---- RenderService ----
+
+
+def test_batched_render_matches_render_image(datasets):
+    """Coalesced cross-session renders == each session's own render_image."""
+    svc = ReconstructionService(slice_iters=4)
+    sids = [svc.submit_scene(ds, FIELD_CFG, TRAIN_CFG, target_iters=8, seed=i)
+            for i, ds in enumerate(datasets)]
+    svc.run()
+
+    for sid, ds in zip(sids, datasets):          # both target the same pose
+        svc.request_render(sid, ds.poses[1])
+    results = svc.renderer.drain()
+    assert [r.session_id for r in results] == sids
+    assert svc.renderer.pending == 0
+
+    for r, ds in zip(results, datasets):
+        sess = svc.sessions[r.session_id]
+        rgb_ref, dep_ref = sess.trainer.render_image(
+            sess.state.params, ds.poses[1], ds)
+        np.testing.assert_allclose(r.rgb, rgb_ref, atol=1e-5)
+        np.testing.assert_allclose(r.depth, dep_ref, atol=1e-5)
+        assert r.snapshot_step == 8
+
+
+def test_render_waits_for_first_snapshot(datasets):
+    """Requests against a session that never published stay queued."""
+    store = SnapshotStore()
+    from repro.serve3d import RenderService
+    rs = RenderService(store)
+    rs.register_session("s0", FIELD_CFG, RCFG, 12, 12, datasets[0].focal,
+                        eval_chunk=144)
+    rs.submit("s0", datasets[0].poses[0])
+    assert rs.drain() == [] and rs.pending == 1
+    sess = SceneSession("s0", datasets[0], FIELD_CFG, TRAIN_CFG, target_iters=4)
+    sess.start()
+    sess.publish(store)
+    results = rs.drain()
+    assert len(results) == 1 and rs.pending == 0
+    assert results[0].snapshot_version == 1
+    with pytest.raises(KeyError):
+        rs.submit("unregistered", datasets[0].poses[0])
+
+
+# ---- eval-render compile cache ----
+
+
+def test_eval_render_cache_keyed_per_config():
+    """Two sessions with the same grids share ONE compiled render fn; a
+    different grid size or chunk gets its own entry (no silent sharing)."""
+    trainer_mod._EVAL_RENDER_CACHE.clear()
+    a = trainer_mod.eval_render_fn(FIELD_CFG, RCFG, 144)
+    b = trainer_mod.eval_render_fn(FIELD_CFG, RCFG, 144)
+    assert a is b
+    bigger = FieldConfig(n_levels=2, max_resolution=32, log2_table_density=12,
+                         log2_table_color=8, hidden=16)
+    assert trainer_mod.eval_render_fn(bigger, RCFG, 144) is not a
+    assert trainer_mod.eval_render_fn(FIELD_CFG, RCFG, 72) is not a
+    assert len(trainer_mod._EVAL_RENDER_CACHE) == 3
