@@ -5,6 +5,11 @@ x); intra-group address distances are tiny (90% within +-5) because pi1 = 1,
 inter-group distances are huge (pi2, pi3 amplification).
 Fig. 10: backward-pass update streams revisit addresses (~5x duplication in
 a 1000-access window); forward streams of distinct points do not merge.
+
+FMU tracking (ISSUE 3): corner-read dedup ratio for Morton-sorted vs
+unsorted compacted batches at several occupancy levels — the fraction of a
+kernel block's corner reads the FMU can coalesce away grows as occupancy
+shrinks (the live set concentrates) and as the batch is spatially ordered.
 """
 import numpy as np
 import jax.numpy as jnp
@@ -12,6 +17,7 @@ import jax.numpy as jnp
 from . import common
 from repro.kernels.hash_encode import ref
 from repro.kernels.grid_update import ref as gu_ref
+from repro.kernels.fused_path import ref as fp_ref
 
 
 def run():
@@ -43,7 +49,32 @@ def run():
     uniq_bwd = float(gu_ref.unique_fraction(jnp.asarray(ridx), 1000))
     common.emit("fig10_unique_window", 0.0,
                 f"fwd_unique={uniq_fwd:.2f};bwd_unique={uniq_bwd:.2f};paper=~1.0_vs_~0.2")
-    return {"frac_small": frac_small, "uniq_fwd": uniq_fwd, "uniq_bwd": uniq_bwd}
+
+    # FMU dedup tracking: compacted batches at several occupancy levels.
+    # Live points concentrate in an occupied sub-box of the unit cube; the
+    # compacted batch is the same point set in flat (ray) order vs Morton
+    # order.  Block ratio = unique reads per (256-point block, level) —
+    # what the fused kernel's in-block dedup sees.
+    levels, t6 = 6, 1 << 13  # bench-scale density grid (common.BASE_FIELD)
+    res6 = ref.level_resolutions(levels, 16, 96)
+    dense6 = tuple(bool(x) for x in ref.level_is_dense(res6, t6))
+    n_batch = 2048
+    dedup_sweep = {}
+    for occ_frac in (1.0, 0.5, 0.25, 0.1):
+        side = occ_frac ** (1.0 / 3.0)  # occupied region: corner sub-box
+        pts = jnp.asarray(
+            (rng.uniform(0, 1, size=(n_batch, 3)) * side).astype(np.float32))
+        srt = pts[jnp.argsort(fp_ref.morton_key(pts))]
+        s_flat = fp_ref.dedup_stats(pts, res6, dense6, t6, block_points=256)
+        s_mort = fp_ref.dedup_stats(srt, res6, dense6, t6, block_points=256)
+        dedup_sweep[occ_frac] = (s_mort["unique_ratio_block"],
+                                 s_flat["unique_ratio_block"])
+        common.emit(f"fmu_dedup[occ={occ_frac}]", 0.0,
+                    f"block_unique_morton={s_mort['unique_ratio_block']:.3f};"
+                    f"block_unique_flat={s_flat['unique_ratio_block']:.3f};"
+                    f"global_unique={s_mort['unique_ratio_global']:.3f}")
+    return {"frac_small": frac_small, "uniq_fwd": uniq_fwd, "uniq_bwd": uniq_bwd,
+            "dedup_sweep": dedup_sweep}
 
 
 if __name__ == "__main__":

@@ -19,6 +19,7 @@ SUITES = [
     ("table2_update_freq", "bench_update_freq"),
     ("table4_algo", "bench_algo"),
     ("pipeline_compaction", "bench_pipeline"),
+    ("fused_path_kernel", "bench_fused_path"),
     ("serve3d_service", "bench_serve3d"),
     ("fig8_10_access_patterns", "bench_access_patterns"),
     ("fig16_18_kernels", "bench_kernels"),

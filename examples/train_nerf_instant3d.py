@@ -36,6 +36,10 @@ def main():
                          "pallas-tpu (default: $REPRO_BACKEND, else auto)")
     ap.add_argument("--no-compact", action="store_true",
                     help="disable occupancy-compacted field queries (dense path)")
+    ap.add_argument("--no-fused-path", action="store_true",
+                    help="shade the compacted batch with the per-grid encode "
+                         "path instead of the fused kernel (debug/timing; "
+                         "compaction stays Morton-ordered either way)")
     args = ap.parse_args()
 
     # explicit flag wins; otherwise the registry default ($REPRO_BACKEND / auto)
@@ -56,6 +60,7 @@ def main():
         n_rays=768, iters=args.iters, f_color=fc, render=render,
         occ=occupancy.OccupancyConfig(update_interval=16, warmup_steps=32),
         compact=not args.no_compact,
+        fused_path=not args.no_fused_path,
     ))
 
     ckpt = CheckpointManager(args.ckpt_dir, keep_last=2)

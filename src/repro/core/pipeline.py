@@ -9,9 +9,13 @@ rendering into explicit stages so the field only ever sees live points:
 
     1. generate_samples   rays × ts -> world points, per-sample dirs
     2. cull               AABB test + occupancy-bitfield lookup -> live mask
-    3. compact            stable argsort on liveness + gather to a fixed,
-                          jit-stable `budget` of points (overflow accounted)
-    4. shade              hash-encode + MLPs on the compacted set only
+    3. compact            stable argsort to a fixed, jit-stable `budget` of
+                          points, live-first in Morton (Z-order) key order
+                          so spatially adjacent points share kernel blocks
+                          (overflow accounted)
+    4. shade              hash-encode + MLPs on the compacted set only; by
+                          default via the fused path (one encode pass over
+                          all grids, pre-sorted BUM backward)
     5. scatter/composite  scatter sigma/rgb back to B×S, volume-render
 
 The budget is a *static* python int (it fixes compiled shapes); callers pick
@@ -35,6 +39,7 @@ import jax.numpy as jnp
 from . import occupancy as occ_lib
 from . import rendering as _r
 from ..kernels.volume_render import ops as vr_ops
+from ..kernels.fused_path import ref as fp_ref
 
 
 def _cube_root(n: int) -> int:
@@ -74,11 +79,20 @@ class CompactionPlan(NamedTuple):
 
 
 class RenderPipeline:
-    """Callable pipeline; stages are exposed as methods for testing/benching."""
+    """Callable pipeline; stages are exposed as methods for testing/benching.
 
-    def __init__(self, field, cfg: _r.RenderConfig):
+    fused_path: route the compacted shade stage through the field's fused
+    query (one encode pass over all grids, FMU-deduplicated corner reads,
+    pre-sorted BUM backward).  Only the budgeted branch is affected; the
+    dense path always uses the plain per-grid query.  On the ref backend the
+    fused query is bit-identical to the unfused one, so this knob changes
+    where the work happens, never the numbers.
+    """
+
+    def __init__(self, field, cfg: _r.RenderConfig, *, fused_path: bool = True):
         self.field = field
         self.cfg = cfg
+        self.fused_path = fused_path and hasattr(field, "query_fused")
 
     # ---- stage 1: sample generation ----
 
@@ -106,10 +120,28 @@ class RenderPipeline:
 
     # ---- stage 3: compact ----
 
-    def compact(self, live, budget: int) -> CompactionPlan:
-        """Stable argsort-on-liveness; first `budget` slots are the live set
-        (original flat order preserved), padded with dead samples."""
-        order = jnp.argsort(jnp.logical_not(live))  # stable: live-first
+    def compact(self, live, budget: int, unit=None) -> CompactionPlan:
+        """Live-first compaction to a fixed budget, padded with dead samples.
+
+        With `unit` coords given, the live set is ordered by Morton (Z-order)
+        key instead of flat sample order: spatially adjacent points land in
+        the same kernel block, which is what makes the fused path's corner
+        reads coalescible (FMU) and its backward update stream quasi-sorted
+        (BUM).  Costs nothing — the single stable argsort just sorts a
+        different key (dead lanes get the max key, so they still pad the
+        tail).  Without `unit`, falls back to the PR 1 flat-order behavior.
+
+        Overflow caveat: when n_live > budget the dropped live points are
+        the highest Morton keys (the box corner nearest (1,1,1)) instead of
+        flat order's end-of-batch rays — either truncation is systematic,
+        and the trainer reacts the same way (widens the next budget bucket).
+        """
+        if unit is None:
+            order = jnp.argsort(jnp.logical_not(live))  # stable: live-first
+        else:
+            key = fp_ref.morton_key(unit)
+            key = jnp.where(live, key, jnp.uint32(0xFFFFFFFF))
+            order = jnp.argsort(key)  # stable: live in Z-order, dead last
         idx = order[:budget]
         n_live = jnp.sum(live.astype(jnp.int32))
         keep = live[idx]
@@ -118,7 +150,9 @@ class RenderPipeline:
 
     # ---- stage 4: shade ----
 
-    def shade(self, params, unit, dirs):
+    def shade(self, params, unit, dirs, fused: bool = False):
+        if fused:
+            return self.field.query_fused(params, unit, dirs)
         return self.field.query(params, unit, dirs)
 
     # ---- stage 5: scatter + composite ----
@@ -165,8 +199,10 @@ class RenderPipeline:
             points_queried = n
         else:
             budget = min(int(budget), n)
-            plan = self.compact(live, budget)
-            sigma_c, rgb_c = self.shade(params, unit[plan.idx], flat_dirs[plan.idx])
+            plan = self.compact(live, budget, unit)
+            sigma_c, rgb_c = self.shade(
+                params, unit[plan.idx], flat_dirs[plan.idx], fused=self.fused_path
+            )
             sigma = jnp.zeros((n,), sigma_c.dtype).at[plan.idx].set(
                 jnp.where(plan.keep, sigma_c, 0.0)
             )

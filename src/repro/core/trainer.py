@@ -109,6 +109,12 @@ class TrainerConfig:
     compact: bool = True
     budget_headroom: float = 1.3
     min_budget: int = 512
+    # fused compacted-path kernel (default on): the shade stage encodes all
+    # grids in one pass over the Morton-ordered budget batch and back-props
+    # table gradients through the pre-sorted BUM merge.  Bit-identical to the
+    # unfused compacted path on the ref backend; turn off to time/debug the
+    # PR 1 per-grid shade.
+    fused_path: bool = True
 
 
 def _branch_update(i: int, freq: float) -> bool:
@@ -137,7 +143,7 @@ class Instant3DTrainer:
         self.opt = AdamW(
             lr=cfg.lr, b2=cfg.b2, eps=cfg.eps, weight_decay=0.0, lr_scale_fn=lr_scale
         )
-        self.pipeline = RenderPipeline(field, cfg.render)
+        self.pipeline = RenderPipeline(field, cfg.render, fused_path=cfg.fused_path)
         self._step_fns = {}
         # host-side live-fraction estimate driving the compaction budget;
         # starts at 1.0 (occupancy warmup = all-occupied => dense)

@@ -123,4 +123,4 @@ def set_backend(backend: str | KernelBackend) -> KernelBackend:
     return _default
 
 
-from . import hash_encode, grid_update, fused_mlp, volume_render  # noqa: F401,E402
+from . import hash_encode, grid_update, fused_mlp, volume_render, fused_path  # noqa: F401,E402

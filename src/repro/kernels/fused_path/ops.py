@@ -1,0 +1,160 @@
+"""Jitted public API for the fused compacted-path encode with pre-sorted BUM
+backward.
+
+`make_fused_encode(...)` returns a differentiable
+
+    encode(points, *tables) -> tuple of (N, L*F) features, one per grid
+
+that evaluates every hash grid of a field (density + color share level
+geometry — same resolutions, different table sizes) in one fused pass:
+
+* corner coords / trilinear weights are computed ONCE and shared by all
+  grids and by both directions (the unfused path recomputes them per grid
+  per direction — 4x for a decomposed field); on Pallas backends the
+  forward runs one kernel per grid (each with in-block dedup) and the
+  shared-geometry pass serves the VJP planning;
+* the residuals deliberately trade memory for backward compute: weights
+  (L,N,8) plus two (L*N*8,) index streams per grid stay live between
+  forward and backward (~a few MB at the compacted budgets used here;
+  see ROADMAP for a recompute policy on memory-bound devices);
+* the forward plans the backward: it computes the stable argsort of each
+  grid's corner-address stream (quasi-sorted already, because the caller
+  feeds Morton-ordered points) and stashes it as a residual;
+* the custom VJP replays that order to emit each grid's table-gradient
+  stream already address-sorted, so `merged_scatter_add(presorted=True)`
+  commits it without any backward-pass argsort (the BUM analogue) and with
+  no corner/index recomputation.
+
+On the ref backend the fused encode is bit-identical to
+`hash_encode.ref.hash_encode` per grid, and — because the stable argsort of
+an identical address stream is the same permutation the unfused backward
+would compute — its table gradients are bit-identical to the unfused
+merged-backward path.  Pallas flavors route the forward through
+`kernel.fused_encode_pallas` (block-deduplicated corner reads).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from . import kernel as _kernel
+from ..hash_encode import ref as he_ref
+from ..hash_encode import ops as he_ops
+from ..grid_update import ops as gu_ops
+
+DEFAULT_BLOCK_POINTS = _kernel.DEFAULT_BLOCK_POINTS
+
+
+def make_fused_encode(
+    resolutions,
+    table_sizes,
+    n_features: int,
+    *,
+    backend=None,
+    merged_backward: bool = True,
+    block_points: int = DEFAULT_BLOCK_POINTS,
+) -> Callable:
+    """Build the fused multi-grid encoder for fixed level geometry.
+
+    resolutions: static per-level grid resolutions (shared by all grids).
+    table_sizes: one table size per grid (e.g. (T_density, T_color)).
+    Returns encode(points (N,3), *tables[(L,T_g,F)]) -> tuple[(N, L*F)].
+    """
+    from .. import resolve_backend
+    be = resolve_backend(backend)
+    resolutions = tuple(int(r) for r in resolutions)
+    table_sizes = tuple(int(t) for t in table_sizes)
+    num_l = len(resolutions)
+    n_grids = len(table_sizes)
+    dense_flags = tuple(
+        tuple(bool(x) for x in he_ref.level_is_dense(np.asarray(resolutions), t))
+        for t in table_sizes
+    )
+
+    def _forward(points, tables):
+        if be.use_pallas:
+            pts, n = he_ops._pad_to(points, block_points)
+            outs = []
+            for g in range(n_grids):
+                out = _kernel.fused_encode_pallas(
+                    pts,
+                    tables[g],
+                    jnp.asarray(resolutions, jnp.int32),
+                    jnp.asarray(dense_flags[g], jnp.int32),
+                    block_points=block_points,
+                    interpret=be.interpret,
+                )
+                outs.append(out[:n])
+            return tuple(outs)
+        corners, weights = ref.corner_geometry(points, resolutions)
+        return tuple(
+            ref.encode_from_indices(
+                tables[g],
+                ref.level_indices(corners, resolutions, table_sizes[g], dense_flags[g]),
+                weights,
+            )
+            for g in range(n_grids)
+        )
+
+    @jax.custom_vjp
+    def encode(points, *tables):
+        return _forward(points, tables)
+
+    def encode_fwd(points, *tables):
+        # Shared geometry: one corner/weight pass serves every grid and, via
+        # the residuals, the whole backward.
+        corners, weights = ref.corner_geometry(points, resolutions)
+        idx_by_grid = [
+            ref.level_indices(corners, resolutions, table_sizes[g], dense_flags[g])
+            for g in range(n_grids)
+        ]
+        if be.use_pallas:
+            outs = _forward(points, tables)
+        else:
+            outs = tuple(
+                ref.encode_from_indices(tables[g], idx_by_grid[g], weights)
+                for g in range(n_grids)
+            )
+        # Plan the backward now: the stable argsort of each grid's address
+        # stream IS the unfused backward's merge order — computing it here
+        # (over the Morton-quasi-sorted stream) lets the VJP skip it.
+        streams = []
+        for g in range(n_grids):
+            addr = ref.address_stream(idx_by_grid[g], table_sizes[g])
+            order = jnp.argsort(addr)
+            streams.append((addr[order], order))
+        w_stack = jnp.stack(weights)  # (L, N, 8)
+        protos = tuple(jnp.zeros((0,), t.dtype) for t in tables)
+        return outs, (points, w_stack, tuple(streams), protos)
+
+    def encode_bwd(res_pack, g_out):
+        points, w_stack, streams, protos = res_pack
+        n = points.shape[0]
+        grads = []
+        for g in range(n_grids):
+            gg = g_out[g].reshape(n, num_l, n_features).astype(jnp.float32)
+            # Update values in canonical stream order (level-major, then
+            # point, then corner) — identical elementwise products to the
+            # unfused `_corner_updates`.
+            vals = (
+                w_stack[:, :, :, None] * jnp.transpose(gg, (1, 0, 2))[:, :, None, :]
+            ).reshape(-1, n_features)
+            addr_sorted, order = streams[g]
+            flat = jnp.zeros((num_l * table_sizes[g], n_features), jnp.float32)
+            if merged_backward:
+                flat = gu_ops.merged_scatter_add(
+                    flat, addr_sorted, vals[order], presorted=True, backend=be
+                )
+            else:
+                flat = flat.at[addr_sorted].add(vals[order])
+            grads.append(
+                flat.reshape(num_l, table_sizes[g], n_features).astype(protos[g].dtype)
+            )
+        return (jnp.zeros_like(points), *grads)
+
+    encode.defvjp(encode_fwd, encode_bwd)
+    return encode

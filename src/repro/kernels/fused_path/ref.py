@@ -1,0 +1,147 @@
+"""Pure-jnp oracle for the fused compacted-path training kernel.
+
+The paper's FMU (forward mapping unit) coalesces the grid reads of nearby
+points — one SRAM bank read serves every point that shares a corner vertex —
+and its BUM merges backward grid updates within a sliding window.  Both wins
+depend on *spatial adjacency in the processing order*: the compacted point
+batch is ours to order, so we sort it by Morton (Z-order) key.  After that,
+
+* points sharing a grid cell sit in the same kernel block, so one corner
+  read serves all of them (FMU analogue — realized in kernel.py's block
+  staging, counted here by `dedup_stats`);
+* the corner-address stream is quasi-sorted, and the *stable* argsort the
+  forward pass computes once (to plan the dedup) doubles as the backward
+  pass's merge order — the VJP emits its table-gradient stream already
+  address-sorted, so `merged_scatter_add(presorted=True)` skips its argsort
+  (BUM analogue).
+
+Everything here is geometry shared with `hash_encode.ref` — same corner
+enumeration, same hashing, bit-identical encode outputs.  The fused path's
+value is *where* the work happens (forward-planned, shared across the
+density/color grids, block-deduplicated), not different math.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..hash_encode import ref as he_ref
+
+
+# --- Morton (Z-order) keys ---------------------------------------------------
+
+MORTON_BITS = 10  # 3*10 = 30 bits, fits uint32; finer than any grid level
+
+
+def _part1by2(v: jnp.ndarray) -> jnp.ndarray:
+    """Spread the low 10 bits of uint32 v so they occupy every 3rd bit."""
+    v = v & jnp.uint32(0x3FF)
+    v = (v | (v << 16)) & jnp.uint32(0x030000FF)
+    v = (v | (v << 8)) & jnp.uint32(0x0300F00F)
+    v = (v | (v << 4)) & jnp.uint32(0x030C30C3)
+    v = (v | (v << 2)) & jnp.uint32(0x09249249)
+    return v
+
+
+def morton_key(unit_points: jnp.ndarray, bits: int = MORTON_BITS) -> jnp.ndarray:
+    """Z-order key for points in [0,1)^3.  (N,3) f32 -> (N,) uint32.
+
+    Out-of-box coordinates are clamped, so dead/padded lanes get a valid
+    (edge) key; callers that must keep them last override the key themselves.
+    """
+    n = 1 << bits
+    q = jnp.clip(jnp.floor(unit_points.astype(jnp.float32) * n), 0, n - 1)
+    q = q.astype(jnp.int32).astype(jnp.uint32)
+    return (
+        _part1by2(q[..., 0])
+        | (_part1by2(q[..., 1]) << 1)
+        | (_part1by2(q[..., 2]) << 2)
+    )
+
+
+# --- shared corner geometry --------------------------------------------------
+
+def corner_geometry(points: jnp.ndarray, resolutions) -> tuple[list, list]:
+    """Per-level corner coords and trilinear weights, computed ONCE.
+
+    The density and color grids share level geometry (same resolutions,
+    different table sizes), so the fused path runs this single pass where the
+    unfused path runs it once per grid per direction (2x forward + 2x
+    backward).  Returns ([ (N,8,3) int32 ]*L, [ (N,8) f32 ]*L).
+    """
+    corners, weights = [], []
+    for l in range(len(resolutions)):
+        c, w = he_ref._level_corners(points, int(resolutions[l]))
+        corners.append(c)
+        weights.append(w)
+    return corners, weights
+
+
+def level_indices(corners: list, resolutions, table_size: int, dense_flags) -> list:
+    """Per-level table indices for one grid from shared corner coords."""
+    return [
+        he_ref.corner_index(corners[l], int(resolutions[l]), table_size,
+                            bool(dense_flags[l]))
+        for l in range(len(corners))
+    ]
+
+
+def address_stream(idx_l: list, table_size: int) -> jnp.ndarray:
+    """Flatten per-level indices into the canonical update-stream order.
+
+    Position l*(N*8) + n*8 + c — exactly the layout hash_encode's
+    `_corner_updates` emits, so a stable argsort of this stream reproduces
+    the unfused backward's merge order bit-for-bit.
+    """
+    return jnp.concatenate(
+        [(idx + l * table_size).reshape(-1) for l, idx in enumerate(idx_l)]
+    )
+
+
+def encode_from_indices(tables: jnp.ndarray, idx_l: list, weights: list) -> jnp.ndarray:
+    """Multires encoding from precomputed indices/weights.
+
+    Bit-identical to `hash_encode.ref.hash_encode` (same gathers, same
+    weighted sum) — the fused forward just reuses the shared geometry.
+    tables (L,T,F) -> (N, L*F) f32.
+    """
+    outs = [
+        jnp.sum(weights[l][..., None] * tables[l][idx_l[l]].astype(jnp.float32), axis=1)
+        for l in range(tables.shape[0])
+    ]
+    return jnp.concatenate(outs, axis=-1)
+
+
+# --- instrumentation (host-side, numpy) --------------------------------------
+
+def dedup_stats(points, resolutions, dense_flags, table_size: int,
+                block_points: int = 256) -> dict:
+    """Unique-corner-read accounting for one grid's forward stream.
+
+    `unique_ratio_block` is the FMU figure of merit: within each
+    (point-block, level) kernel step, the fraction of corner reads that hit
+    distinct addresses — every duplicate is a read the FMU coalesces away.
+    `unique_ratio_global` is the whole-batch bound (what a block of
+    unbounded size would achieve).
+    """
+    pts = np.asarray(points)
+    n = pts.shape[0]
+    corners, _ = corner_geometry(jnp.asarray(pts), resolutions)
+    idx_l = level_indices(corners, resolutions, table_size, dense_flags)
+    total = 0
+    uniq_global = 0
+    block_ratios = []
+    for l, idx in enumerate(idx_l):
+        a = np.asarray(idx).reshape(n, 8)
+        total += a.size
+        uniq_global += np.unique(a).size
+        for s in range(0, n, block_points):
+            blk = a[s : s + block_points].reshape(-1)
+            block_ratios.append(np.unique(blk).size / blk.size)
+    return {
+        "total_reads": int(total),
+        "unique_reads_global": int(uniq_global),
+        "unique_ratio_global": uniq_global / total,
+        "unique_ratio_block": float(np.mean(block_ratios)),
+        "n_blocks": len(block_ratios),
+    }

@@ -16,11 +16,22 @@ import jax.numpy as jnp
 from . import kernel as _kernel
 
 
-def _sort_updates(idx: jnp.ndarray, vals: jnp.ndarray, table_size: int, pad_to: int | None):
-    """Sort the update stream by address; pad with spill-row entries."""
-    order = jnp.argsort(idx)
-    idx_s = idx[order]
-    vals_s = vals[order]
+def _sort_updates(idx: jnp.ndarray, vals: jnp.ndarray, table_size: int, pad_to: int | None,
+                  presorted: bool = False):
+    """Sort the update stream by address; pad with spill-row entries.
+
+    presorted=True skips the argsort: the caller guarantees idx is already
+    non-decreasing (e.g. the fused-path VJP, which emits the stream through
+    the stable order computed once in its forward pass).  Because jnp.argsort
+    is stable, sorting an already-sorted stream is the identity permutation,
+    so both paths are bit-identical on sorted input.
+    """
+    if presorted:
+        idx_s, vals_s = idx, vals
+    else:
+        order = jnp.argsort(idx)
+        idx_s = idx[order]
+        vals_s = vals[order]
     if pad_to is not None and idx.shape[0] % pad_to != 0:
         pad = pad_to - idx.shape[0] % pad_to
         idx_s = jnp.concatenate([idx_s, jnp.full((pad,), table_size, jnp.int32)])
@@ -28,7 +39,7 @@ def _sort_updates(idx: jnp.ndarray, vals: jnp.ndarray, table_size: int, pad_to: 
     return idx_s, vals_s
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "backend"))
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "backend", "presorted"))
 def merged_scatter_add(
     table: jnp.ndarray,
     idx: jnp.ndarray,
@@ -37,6 +48,7 @@ def merged_scatter_add(
     use_pallas: bool = False,
     interpret: bool = True,
     backend=None,
+    presorted: bool = False,
 ) -> jnp.ndarray:
     """table (T,F) += vals (M,F) at rows idx (M,) with BUM-merged writes.
 
@@ -44,6 +56,10 @@ def merged_scatter_add(
     (a `repro.kernels` registry name or KernelBackend) routes the commit
     stage to the Pallas kernel, overriding the use_pallas/interpret pair
     (kernel-level escape hatch kept for direct validation).
+
+    presorted=True promises idx is already non-decreasing and skips the
+    argsort — the BUM fast path for callers that control update order (the
+    fused compacted-path VJP emits its table-gradient stream pre-sorted).
     """
     if backend is not None:
         from .. import resolve_backend
@@ -51,10 +67,11 @@ def merged_scatter_add(
         use_pallas, interpret = be.use_pallas, be.interpret
     t = table.shape[0]
     if use_pallas:
-        idx_s, vals_s = _sort_updates(idx, vals, t, _kernel.DEFAULT_BLOCK)
+        idx_s, vals_s = _sort_updates(idx, vals, t, _kernel.DEFAULT_BLOCK,
+                                      presorted=presorted)
         return _kernel.bum_scatter_pallas(table, idx_s, vals_s, interpret=interpret)
 
-    idx_s, vals_s = _sort_updates(idx, vals, t, None)
+    idx_s, vals_s = _sort_updates(idx, vals, t, None, presorted=presorted)
     m = idx_s.shape[0]
     is_start = jnp.concatenate([jnp.ones((1,), bool), idx_s[1:] != idx_s[:-1]])
     seg_id = jnp.cumsum(is_start) - 1  # (M,)

@@ -33,14 +33,17 @@ from . import ref
 DEFAULT_BLOCK_POINTS = 256
 
 
-def _encode_kernel(res_ref, dense_ref, pts_ref, tbl_ref, out_ref):
-    """One (point-block, level) grid step."""
-    resolution = res_ref[0]
-    dense = dense_ref[0]
-    table = tbl_ref[0]  # (T, F)
-    t = table.shape[0]
+def corner_indices_block(pts, resolution, dense, t):
+    """Shared in-kernel corner enumeration for one (point-block, level) step.
 
-    pts = pts_ref[...].astype(jnp.float32)  # (B, 3)
+    pts (B,3) f32, resolution/dense scalars, t = table rows.  Returns
+    (idx (B,8) int32, weights (B,8) f32) with sentinel rows (coordinate < 0,
+    ops.PAD_SENTINEL padding) pinned to row 0 and zero weight — they must
+    not hash into live table cells nor contribute output.  Used by both the
+    plain hash_encode kernel and the fused-path kernel, so hashing/sentinel
+    semantics cannot diverge between them.
+    """
+    valid = pts[:, 0] >= 0.0  # (B,)
     scaled = pts * resolution.astype(jnp.float32)
     base = jnp.floor(scaled)
     frac = scaled - base  # (B, 3)
@@ -69,13 +72,22 @@ def _encode_kernel(res_ref, dense_ref, pts_ref, tbl_ref, out_ref):
         & jnp.uint32(t - 1)
     ).astype(jnp.int32)
     idx = jnp.where(dense > 0, dense_idx, hash_idx)  # (B, 8)
-
-    # FRM analogue: one vectorized gather for the whole block's 8 corners.
-    feats = table[idx.reshape(-1)].reshape(idx.shape + (table.shape[-1],))
+    idx = jnp.where(valid[:, None], idx, 0)  # sentinel rows read row 0 only
 
     offs_f = offs.astype(jnp.float32)  # (8, 3)
     w = jnp.where(offs_f[None, :, :] > 0, frac[:, None, :], 1.0 - frac[:, None, :])
-    weights = jnp.prod(w, axis=-1)  # (B, 8)
+    weights = jnp.prod(w, axis=-1) * valid.astype(jnp.float32)[:, None]  # (B, 8)
+    return idx, weights
+
+
+def _encode_kernel(res_ref, dense_ref, pts_ref, tbl_ref, out_ref):
+    """One (point-block, level) grid step."""
+    table = tbl_ref[0]  # (T, F)
+    pts = pts_ref[...].astype(jnp.float32)  # (B, 3)
+    idx, weights = corner_indices_block(pts, res_ref[0], dense_ref[0], table.shape[0])
+
+    # FRM analogue: one vectorized gather for the whole block's 8 corners.
+    feats = table[idx.reshape(-1)].reshape(idx.shape + (table.shape[-1],))
 
     out_ref[...] = jnp.sum(
         weights[..., None] * feats.astype(jnp.float32), axis=1

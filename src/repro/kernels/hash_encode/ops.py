@@ -26,7 +26,14 @@ from . import kernel as _kernel
 from ..grid_update import ops as grid_update_ops
 
 
-def _pad_to(x: jnp.ndarray, multiple: int, fill=0.0):
+# Padding sentinel for point batches that aren't a block multiple.  Real
+# points live in [0,1)^3; sentinel rows are detected in-kernel (coordinate
+# < 0), routed to table row 0 (one fixed address, no reads scattered into
+# live cells) and masked to zero in the output.
+PAD_SENTINEL = -1.0
+
+
+def _pad_to(x: jnp.ndarray, multiple: int, fill=PAD_SENTINEL):
     n = x.shape[0]
     if n % multiple == 0:
         return x, n
@@ -40,7 +47,7 @@ def _forward(points, tables, resolutions, dense_flags, be, block_points: int):
         from .. import resolve_backend
         be = resolve_backend(be)
     if be.use_pallas:
-        pts, n = _pad_to(points, block_points, fill=0.5)
+        pts, n = _pad_to(points, block_points)
         out = _kernel.hash_encode_pallas(
             pts,
             tables,

@@ -1,0 +1,240 @@
+"""Fused compacted-path kernel: forward/gradient equivalence, Morton order,
+presorted BUM backward, pipeline wiring."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Field, FieldConfig, occupancy
+from repro.core.pipeline import RenderPipeline
+from repro.core.rendering import RenderConfig, sample_ts
+from repro.kernels.hash_encode import ref as he_ref, ops as he_ops
+from repro.kernels.fused_path import ref as fp_ref, ops as fp_ops
+
+L, F = 4, 2
+TD, TC = 1 << 12, 1 << 10
+RES = he_ref.level_resolutions(L, 8, 64)
+
+
+def _points(rng, n=400, sort=True):
+    pts = jnp.asarray(rng.uniform(0, 0.999, (n, 3)).astype(np.float32))
+    if sort:
+        pts = pts[jnp.argsort(fp_ref.morton_key(pts))]
+    return pts
+
+
+def _tables(rng):
+    td = jnp.asarray(rng.normal(size=(L, TD, F)).astype(np.float32) * 0.1)
+    tc = jnp.asarray(rng.normal(size=(L, TC, F)).astype(np.float32) * 0.1)
+    return td, tc
+
+
+# ---- Morton keys ----
+
+def test_morton_key_interleave():
+    """Key of quantized (x,y,z) == python-int bit interleave."""
+    bits = fp_ref.MORTON_BITS
+    n = 1 << bits
+    pts = np.array([[0.0, 0.0, 0.0], [0.5, 0.25, 0.75], [0.999, 0.001, 0.4]],
+                   np.float32)
+    got = np.asarray(fp_ref.morton_key(jnp.asarray(pts)))
+    for p, k in zip(pts, got):
+        q = np.clip(np.floor(p * n), 0, n - 1).astype(np.uint64)
+        expect = 0
+        for b in range(bits):
+            for d in range(3):
+                expect |= ((int(q[d]) >> b) & 1) << (3 * b + d)
+        assert int(k) == expect
+
+
+def test_morton_sort_groups_cells(rng):
+    """After Morton sort, points sharing a fine grid cell are contiguous."""
+    pts = _points(rng, 512, sort=True)
+    cell = np.asarray(jnp.floor(pts * 16).astype(np.int32))
+    key = cell[:, 0] + 16 * cell[:, 1] + 256 * cell[:, 2]
+    # each cell id appears in exactly one contiguous run
+    changes = (np.diff(key) != 0).sum()
+    assert changes + 1 == len(np.unique(key))
+
+
+# ---- forward equivalence ----
+
+def test_fused_forward_bit_matches_ref(rng):
+    td, tc = _tables(rng)
+    pts = _points(rng)
+    enc = fp_ops.make_fused_encode(RES, (TD, TC), F, backend="ref")
+    fd, fc = enc(pts, td, tc)
+    np.testing.assert_array_equal(np.asarray(fd), np.asarray(he_ref.hash_encode(pts, td, RES)))
+    np.testing.assert_array_equal(np.asarray(fc), np.asarray(he_ref.hash_encode(pts, tc, RES)))
+
+
+def test_fused_forward_pallas_matches_ref(rng):
+    td, tc = _tables(rng)
+    pts = _points(rng, n=513)  # non-multiple of block => sentinel padding
+    enc = fp_ops.make_fused_encode(RES, (TD, TC), F, backend="pallas-interpret",
+                                   block_points=256)
+    fd, fc = enc(pts, td, tc)
+    np.testing.assert_allclose(np.asarray(fd), np.asarray(he_ref.hash_encode(pts, td, RES)),
+                               atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(fc), np.asarray(he_ref.hash_encode(pts, tc, RES)),
+                               atol=1e-6, rtol=1e-6)
+
+
+# ---- gradient equivalence (satellite: fused vs ref encode + oracle) ----
+
+@pytest.mark.parametrize("merged", [True, False])
+def test_fused_table_grads_match_unfused(merged, rng):
+    """Table grads must be bit-identical to the unfused merged backward: the
+    stable argsort the fused forward stashes is exactly the permutation the
+    unfused backward's merged_scatter_add would compute."""
+    td, tc = _tables(rng)
+    pts = _points(rng)
+    enc = fp_ops.make_fused_encode(RES, (TD, TC), F, backend="ref", merged_backward=merged)
+    enc_d = he_ops.make_hash_encode(RES, TD, F, backend="ref", merged_backward=merged)
+    enc_c = he_ops.make_hash_encode(RES, TC, F, backend="ref", merged_backward=merged)
+
+    def loss_fused(a, b):
+        fd, fc = enc(pts, a, b)
+        return (fd ** 2).sum() + (fc * 1.7).sum()
+
+    def loss_unfused(a, b):
+        return (enc_d(pts, a) ** 2).sum() + (enc_c(pts, b) * 1.7).sum()
+
+    gf = jax.jit(jax.grad(loss_fused, argnums=(0, 1)))(td, tc)
+    gu = jax.jit(jax.grad(loss_unfused, argnums=(0, 1)))(td, tc)
+    if merged:
+        np.testing.assert_array_equal(np.asarray(gf[0]), np.asarray(gu[0]))
+        np.testing.assert_array_equal(np.asarray(gf[1]), np.asarray(gu[1]))
+    else:
+        # unmerged scatter accumulates duplicates in a different order
+        np.testing.assert_allclose(np.asarray(gf[0]), np.asarray(gu[0]), atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(gf[1]), np.asarray(gu[1]), atol=1e-4, rtol=1e-4)
+
+
+def test_fused_table_grads_match_autodiff_oracle(rng):
+    """Against the naive duplicate scatter-add oracle (hash_encode.ref)."""
+    td, tc = _tables(rng)
+    pts = _points(rng)
+    enc = fp_ops.make_fused_encode(RES, (TD, TC), F, backend="ref")
+    g = jax.grad(lambda a: (enc(pts, a, tc)[0] ** 2).sum())(td)
+    g_oracle = jax.grad(lambda a: (he_ref.hash_encode(pts, a, RES) ** 2).sum())(td)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_oracle), atol=1e-4, rtol=1e-4)
+
+
+def test_fused_field_query_grads_match(rng):
+    """Full field: query_fused vs query on a random compacted batch — forward
+    <=1e-5 (bit-equal on ref), table grads bit-comparable, MLP grads tight."""
+    cfg = FieldConfig(n_levels=L, max_resolution=64, log2_table_density=12,
+                      log2_table_color=10)
+    field = Field(cfg)
+    params = field.init(jax.random.PRNGKey(0))
+    pts = _points(rng, 300)
+    dirs = jnp.asarray(rng.normal(size=(300, 3)).astype(np.float32))
+    dirs = dirs / jnp.linalg.norm(dirs, axis=-1, keepdims=True)
+    target = jnp.asarray(rng.uniform(0, 1, (300, 3)).astype(np.float32))
+
+    def loss(p, fused):
+        q = field.query_fused if fused else field.query
+        sigma, rgb = q(p, pts, dirs)
+        return jnp.mean((rgb - target) ** 2) + jnp.mean(sigma) * 1e-3
+
+    sf, su = loss(params, True), loss(params, False)
+    np.testing.assert_allclose(float(sf), float(su), atol=1e-7)
+    gf = jax.jit(lambda p: jax.grad(loss)(p, True))(params)
+    gu = jax.jit(lambda p: jax.grad(loss)(p, False))(params)
+    for grid in ("density_grid", "color_grid"):
+        np.testing.assert_array_equal(np.asarray(gf[grid]), np.asarray(gu[grid]),
+                                      err_msg=f"{grid} grads diverge")
+    for mlp in ("density_mlp", "color_mlp"):
+        for k in gf[mlp]:
+            np.testing.assert_allclose(np.asarray(gf[mlp][k]), np.asarray(gu[mlp][k]),
+                                       atol=1e-6, rtol=1e-6, err_msg=f"{mlp}.{k}")
+
+
+def test_fused_non_decomposed_field(rng):
+    """NGP baseline (single grid) also routes through the fused encode."""
+    cfg = FieldConfig(n_levels=L, max_resolution=64, log2_table_density=12,
+                      decomposed=False)
+    field = Field(cfg)
+    params = field.init(jax.random.PRNGKey(0))
+    pts = _points(rng, 128)
+    dirs = jnp.asarray(rng.normal(size=(128, 3)).astype(np.float32))
+    dirs = dirs / jnp.linalg.norm(dirs, axis=-1, keepdims=True)
+    sf, cf = field.query_fused(params, pts, dirs)
+    su, cu = field.query(params, pts, dirs)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(su), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(cf), np.asarray(cu), atol=1e-6)
+
+
+# ---- pipeline wiring ----
+
+def test_pipeline_fused_matches_unfused(rng):
+    """Compacted render + gradients identical with the fused shade stage."""
+    fcfg = FieldConfig(n_levels=L, max_resolution=64, log2_table_density=12,
+                       log2_table_color=10)
+    rcfg = RenderConfig(n_samples=16)
+    field = Field(fcfg)
+    params = field.init(jax.random.PRNGKey(0))
+    b = 32
+    origins = jnp.asarray(rng.uniform(-0.5, 0.5, (b, 3)).astype(np.float32))
+    origins = origins.at[:, 2].set(4.0)
+    dirs = jnp.asarray(rng.normal(size=(b, 3)).astype(np.float32))
+    dirs = dirs.at[:, 2].set(-jnp.abs(dirs[:, 2]) - 1.0)
+    dirs = dirs / jnp.linalg.norm(dirs, axis=-1, keepdims=True)
+    ts = sample_ts(jax.random.PRNGKey(1), b, rcfg)
+    bits = jnp.ones((occupancy.OccupancyConfig().resolution ** 3,), bool)
+
+    pipe_f = RenderPipeline(field, rcfg, fused_path=True)
+    pipe_u = RenderPipeline(field, rcfg, fused_path=False)
+    budget = 256
+    target = jnp.asarray(rng.uniform(0, 1, (b, 3)).astype(np.float32))
+
+    def loss(p, pipe):
+        out = pipe(p, origins, dirs, ts, bitfield=bits, budget=budget)
+        return jnp.mean((out["rgb"] - target) ** 2)
+
+    of = pipe_f(params, origins, dirs, ts, bitfield=bits, budget=budget)
+    ou = pipe_u(params, origins, dirs, ts, bitfield=bits, budget=budget)
+    np.testing.assert_array_equal(np.asarray(of["rgb"]), np.asarray(ou["rgb"]))
+    gf = jax.grad(loss)(params, pipe_f)
+    gu = jax.grad(loss)(params, pipe_u)
+    for (path, a), bb in zip(jax.tree_util.tree_leaves_with_path(gf),
+                             jax.tree_util.tree_leaves(gu)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(bb),
+                                      err_msg=f"grad mismatch at {path}")
+
+
+def test_compact_morton_order_is_live_first(rng):
+    """Morton-keyed compaction keeps the live-first/dead-last contract."""
+    fcfg = FieldConfig(n_levels=2, max_resolution=16, log2_table_density=10,
+                       log2_table_color=8)
+    pipe = RenderPipeline(Field(fcfg), RenderConfig(n_samples=8))
+    n = 256
+    live = jnp.asarray(rng.uniform(size=n) < 0.3)
+    unit = jnp.asarray(rng.uniform(0, 1, (n, 3)).astype(np.float32))
+    n_live = int(live.sum())
+    plan = pipe.compact(live, n_live + 8, unit)
+    assert bool(plan.keep[:n_live].all()) and not bool(plan.keep[n_live:].any())
+    assert int(plan.overflow) == 0
+    # live prefix is in Morton order
+    keys = np.asarray(fp_ref.morton_key(unit[plan.idx[:n_live]]))
+    assert (np.diff(keys.astype(np.int64)) >= 0).all()
+
+
+# ---- dedup instrumentation ----
+
+def test_dedup_stats_counts(rng):
+    """Morton-sorted batches must dedup strictly better per block, and a
+    batch of identical points collapses to ~8 unique reads per level."""
+    dense = tuple(bool(x) for x in he_ref.level_is_dense(RES, TD))
+    same = jnp.broadcast_to(jnp.asarray([[0.3, 0.4, 0.5]], jnp.float32), (64, 3))
+    s = fp_ref.dedup_stats(same, RES, dense, TD, block_points=64)
+    assert s["unique_reads_global"] == 8 * L
+    assert s["unique_ratio_block"] == pytest.approx(8 / (64 * 8))
+
+    pts = jnp.asarray(rng.uniform(0, 1, (512, 3)).astype(np.float32))
+    unsorted = fp_ref.dedup_stats(pts, RES, dense, TD, block_points=128)
+    srt = fp_ref.dedup_stats(pts[jnp.argsort(fp_ref.morton_key(pts))], RES, dense,
+                             TD, block_points=128)
+    assert srt["unique_ratio_block"] <= unsorted["unique_ratio_block"]
+    assert srt["unique_ratio_global"] == pytest.approx(unsorted["unique_ratio_global"])

@@ -37,6 +37,39 @@ def test_merge_property(t, m, seed, heavy_collisions):
     np.testing.assert_allclose(np.asarray(merged), np.asarray(naive), atol=1e-4, rtol=1e-4)
 
 
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.sampled_from([16, 64, 256]),
+    m=st.integers(1, 400),
+    seed=st.integers(0, 2**31 - 1),
+    heavy_collisions=st.booleans(),
+)
+def test_presorted_property(t, m, seed, heavy_collisions):
+    """Property: on an address-sorted stream, presorted=True (skip argsort)
+    is BIT-identical to the unsorted path — stable argsort of sorted input
+    is the identity, so both run the same segment merge."""
+    r = np.random.default_rng(seed)
+    hi = max(t // 16, 1) if heavy_collisions else t
+    idx = np.sort(r.integers(0, hi, size=m).astype(np.int32))
+    vals = jnp.asarray(r.normal(size=(m, 2)).astype(np.float32))
+    table = jnp.asarray(r.normal(size=(t, 2)).astype(np.float32))
+    idx = jnp.asarray(idx)
+    fast = ops.merged_scatter_add(table, idx, vals, presorted=True)
+    slow = ops.merged_scatter_add(table, idx, vals, presorted=False)
+    np.testing.assert_array_equal(np.asarray(fast), np.asarray(slow))
+
+
+def test_presorted_pallas_matches(rng):
+    """presorted routing also reaches the Pallas commit kernel unchanged."""
+    t, m = 128, 500
+    idx = jnp.asarray(np.sort(rng.integers(0, t, size=m)).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=(m, 2)).astype(np.float32))
+    table = jnp.zeros((t, 2), jnp.float32)
+    naive = ref.scatter_add(table, idx, vals)
+    fast = ops.merged_scatter_add(table, idx, vals, use_pallas=True, presorted=True)
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(naive), atol=1e-4, rtol=1e-5)
+
+
 def test_unique_counting(rng):
     idx = jnp.asarray(np.array([1, 1, 2, 5, 5, 5, 9], np.int32))
     assert int(ops.num_unique_addresses(idx)) == 4

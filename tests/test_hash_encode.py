@@ -42,6 +42,29 @@ def test_custom_vjp_matches_autodiff(merged, rng):
     np.testing.assert_allclose(np.asarray(g_custom), np.asarray(g_auto), atol=1e-4, rtol=1e-4)
 
 
+def test_pallas_padding_is_inert(rng):
+    """Regression: block padding must not hash into live table cells.  The
+    sentinel-padded batch encodes identically to the unpadded batch, and the
+    sentinel rows themselves produce exactly zero."""
+    L, t, F = 3, 1 << 10, 2
+    res = ref.level_resolutions(L, 8, 64)
+    dense = ref.level_is_dense(res, t)
+    tables = jnp.asarray(rng.normal(size=(L, t, F)).astype(np.float32) * 0.1)
+    pts = jnp.asarray(rng.uniform(0, 0.999, size=(300, 3)).astype(np.float32))
+
+    # 300 pads to 512 internally; the first 256 must match a pad-free call
+    out_padded = ops._forward(pts, tables, tuple(res), tuple(dense), "pallas", 256)
+    out_nopad = ops._forward(pts[:256], tables, tuple(res), tuple(dense), "pallas", 256)
+    np.testing.assert_array_equal(np.asarray(out_padded[:256]), np.asarray(out_nopad))
+
+    # sentinel rows fed straight to the kernel: zero output, row-0 reads only
+    sent = jnp.full((256, 3), ops.PAD_SENTINEL, jnp.float32)
+    out_sent = kernel.hash_encode_pallas(
+        sent, tables, jnp.asarray(res, jnp.int32),
+        jnp.asarray(dense, jnp.int32), block_points=256, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_sent), np.zeros((256, L * F), np.float32))
+
+
 def test_dense_levels_have_no_collisions():
     res = np.array([4])  # (4+1)^3 = 125 <= 256
     t = 256
