@@ -1,0 +1,173 @@
+"""Occupancy-guided sample redistribution vs the uniform compacted sampler.
+
+Emits `BENCH_sampler.json` with the two views of the adaptive-sampling
+lever (ISSUE 4):
+
+Training draws rays from views 2..7 only; views 0-1 are held out and all
+PSNR numbers are measured on them, so the deltas reflect reconstruction
+quality, not train-pixel fit.
+
+* **PSNR at equal compacted points** — both samplers trained under the same
+  hard point ceiling (`max_budget` below the steady-state live count, the
+  on-device regime).  The uniform sampler must drop live points every step
+  (Morton-tail truncation, counted in `overflow_*`); redistribution spends
+  exactly the ceiling, evenly across rays.  `psnr_rgb_delta_equal_points`
+  must be >= +0.3 dB (asserted in full runs; smoke runs only report it).
+* **Points at equal PSNR** — held-out-view rendering from one trained model
+  at equal queried points/ray: uniform-dense at S samples vs adaptive at S
+  redistributed samples (placed from 24 jittered candidates).  The sweep
+  yields the smallest adaptive budget matching the uniform S=24 quality.
+* **off_bit_identical** (asserted in every mode): with the knob off the
+  redistribute stage is never traced (the bench replaces it with a raiser)
+  and training is bit-identical to the config-default run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from dataclasses import replace
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Field, Instant3DTrainer, occupancy, losses
+from repro.core.pipeline import RenderPipeline
+from repro.core.rendering import sample_ts
+from repro.core.trainer import image_rays
+from repro.data import RaySampler
+
+from .common import BASE_FIELD, BASE_TRAIN, dataset, emit
+
+OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_sampler.json"
+# below the ~1350-point steady-state live count at BASE_TRAIN scale
+# (n_rays=512, S=24, live fraction ~0.11): the ceiling bites every step
+MAX_BUDGET = 1024
+TRAIN_VIEWS = range(2, 8)   # views 0-1 held out for every PSNR below
+EVAL_VIEWS = [0, 1]
+
+
+def _train(iters: int, forbid_stage: bool = False, **cfg_kw):
+    scene, ds = dataset()
+    tr = Instant3DTrainer(Field(BASE_FIELD), replace(BASE_TRAIN, **cfg_kw))
+    if forbid_stage:
+        def _boom(*a, **k):
+            raise AssertionError("redistribute stage traced with the knob off")
+        tr.pipeline.redistribute = _boom
+    state = tr.init(jax.random.PRNGKey(0))
+    sampler = RaySampler(ds, views=TRAIN_VIEWS)
+    state, hist = tr.train(state, sampler, iters=iters, log_every=max(iters // 4, 1))
+    return tr, state, ds, hist
+
+
+def _bit_identical(pa, pb) -> bool:
+    return all(bool(np.array_equal(np.asarray(a), np.asarray(b)))
+               for a, b in zip(jax.tree_util.tree_leaves(pa),
+                               jax.tree_util.tree_leaves(pb)))
+
+
+def _render_view(tr, params, bits, ds, v: int, s_query: int, adaptive: bool) -> float:
+    """PSNR of view v rendered at s_query queried points/ray."""
+    s_cand = BASE_TRAIN.render.n_samples if adaptive else s_query
+    cfg = replace(BASE_TRAIN.render, n_samples=s_cand, stratified=False)
+    pipe = RenderPipeline(tr.field, cfg, redistribute=adaptive)
+    o, d, n, chunk = image_rays(ds.poses[v], ds.h, ds.w, ds.focal, 4096)
+    ts = sample_ts(None, chunk, cfg)
+    outs = []
+    for i in range(0, o.shape[0], chunk):
+        out = pipe(params, o[i:i + chunk], d[i:i + chunk], ts,
+                   bitfield=bits, budget=chunk * s_query if adaptive else None)
+        outs.append(out["rgb"])
+    rgb = jnp.concatenate(outs)[:n].reshape(ds.h, ds.w, 3)
+    return float(losses.psnr(rgb, jnp.asarray(ds.images[v])))
+
+
+def run(smoke: bool = False) -> None:
+    train_iters = 96 if smoke else 200
+    ident_iters = 48 if smoke else 96
+
+    # ---- uniform-fallback bit-identity (knob off == stage absent) ----
+    _, st_a, _, _ = _train(ident_iters, forbid_stage=True)
+    _, st_b, _, _ = _train(ident_iters)
+    off_bit_identical = _bit_identical(st_a.params, st_b.params)
+
+    # ---- equal-points training under a hard budget ceiling ----
+    tr_u, st_u, ds, hist_u = _train(train_iters, max_budget=MAX_BUDGET)
+    tr_a, st_a2, _, hist_a = _train(train_iters, max_budget=MAX_BUDGET,
+                                    redistribute=True)
+    assert hist_u["points_queried"][-1] == hist_a["points_queried"][-1] == MAX_BUDGET, \
+        "equal-points comparison requires both variants to sit at the ceiling"
+    ev_u = tr_u.evaluate(st_u.params, ds, views=EVAL_VIEWS)
+    ev_a = tr_a.evaluate(st_a2.params, ds, views=EVAL_VIEWS)
+    d_rgb = ev_a["psnr_rgb"] - ev_u["psnr_rgb"]
+    d_dep = ev_a["psnr_depth"] - ev_u["psnr_depth"]
+
+    # ---- points at equal PSNR: novel-view renders from one model ----
+    tr_r, st_r, ds_r, hist_r = _train(32 if smoke else 160)
+    bits = occupancy.bitfield(st_r.occ_state, tr_r.cfg.occ)
+    s_full = BASE_TRAIN.render.n_samples
+    sweep_s = (4,) if smoke else (2, 3, 4, 6, 12)
+    render = {}
+    for s in (*sweep_s, s_full):
+        render[s] = {
+            "uniform": _render_view(tr_r, st_r.params, bits, ds_r, EVAL_VIEWS[0], s, False),
+            "adaptive": _render_view(tr_r, st_r.params, bits, ds_r, EVAL_VIEWS[0], s, True),
+        }
+    ref_psnr = render[s_full]["uniform"]
+    match = next((s for s in sorted(render)
+                  if render[s]["adaptive"] >= ref_psnr - 0.1), s_full)
+
+    result = {
+        "iters": train_iters,
+        "n_rays": BASE_TRAIN.n_rays,
+        "n_samples": s_full,
+        "max_budget": MAX_BUDGET,
+        "off_bit_identical": off_bit_identical,
+        "equal_points_training": {
+            "uniform": {"psnr_rgb": ev_u["psnr_rgb"], "psnr_depth": ev_u["psnr_depth"],
+                        "points_per_step": hist_u["points_queried"][-1],
+                        "overflow_steps": hist_u["overflow_steps"],
+                        "overflow_points_total": hist_u["overflow_total"]},
+            "adaptive": {"psnr_rgb": ev_a["psnr_rgb"], "psnr_depth": ev_a["psnr_depth"],
+                         "points_per_step": hist_a["points_queried"][-1],
+                         "overflow_steps": hist_a["overflow_steps"],
+                         "overflow_points_total": hist_a["overflow_total"]},
+        },
+        "psnr_rgb_delta_equal_points": d_rgb,
+        "psnr_depth_delta_equal_points": d_dep,
+        "render_equal_points": {
+            str(s): {**v, "delta": v["adaptive"] - v["uniform"]}
+            for s, v in sorted(render.items())
+        },
+        "points_at_equal_psnr": {
+            "uniform_s": s_full,
+            "uniform_psnr": ref_psnr,
+            "adaptive_s_matching": match,
+            "points_ratio": match / s_full,
+        },
+    }
+    OUT_PATH.write_text(json.dumps(result, indent=2) + "\n")
+
+    emit("sampler[uniform@cap]", 0.0,
+         f"psnr={ev_u['psnr_rgb']:.2f} overflow_steps={hist_u['overflow_steps']}")
+    emit("sampler[adaptive@cap]", 0.0,
+         f"psnr={ev_a['psnr_rgb']:.2f} overflow_steps={hist_a['overflow_steps']}")
+    emit("sampler[parity]", 0.0,
+         f"dpsnr_equal_points={d_rgb:+.3f}dB;off_bit_identical={off_bit_identical};"
+         f"points_at_equal_psnr={match}/{s_full} -> {OUT_PATH.name}")
+
+    assert off_bit_identical, "redistribute=False diverged from the uniform baseline"
+    if not smoke:
+        assert d_rgb >= 0.3, (
+            f"adaptive sampler must beat uniform by >= 0.3 dB at equal points, "
+            f"got {d_rgb:+.3f}"
+        )
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short run for CI (fewer iters, reduced render sweep; "
+                         "the bit-identity assertion still runs)")
+    run(**vars(ap.parse_args()))

@@ -40,6 +40,12 @@ def main():
                     help="shade the compacted batch with the per-grid encode "
                          "path instead of the fused kernel (debug/timing; "
                          "compaction stays Morton-ordered either way)")
+    ap.add_argument("--redistribute", action="store_true",
+                    help="occupancy-guided sample redistribution (pipeline "
+                         "stage 2b): re-spend each ray's freed sample budget "
+                         "on its live segments via inverse-CDF placement — "
+                         "finer live-region stratification at <= the same "
+                         "compacted point budget")
     args = ap.parse_args()
 
     # explicit flag wins; otherwise the registry default ($REPRO_BACKEND / auto)
@@ -61,6 +67,7 @@ def main():
         occ=occupancy.OccupancyConfig(update_interval=16, warmup_steps=32),
         compact=not args.no_compact,
         fused_path=not args.no_fused_path,
+        redistribute=args.redistribute,
     ))
 
     ckpt = CheckpointManager(args.ckpt_dir, keep_last=2)

@@ -160,7 +160,14 @@ class Field:
         backends, and a custom VJP whose table-gradient streams commit
         through `merged_scatter_add(presorted=True)`.  Bit-identical to
         `query` on the ref backend (values AND gradients) — callers feed
-        Morton-ordered points to realize the data-reuse win."""
+        Morton-ordered points to realize the data-reuse win.
+
+        The pipeline's compact stage Morton-orders whatever sample
+        positions reach it — uniform or redistributed (stage 2b) alike —
+        so adaptive placement composes with the fused path for free: the
+        denser live-region samples cluster into *fewer* distinct cells,
+        which raises block-level corner-read dedup rather than breaking
+        it."""
         if self.cfg.decomposed:
             hd, hc = self._fused_encode(
                 points, params["density_grid"], params["color_grid"]

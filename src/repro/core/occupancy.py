@@ -56,7 +56,15 @@ def cell_centers(cfg: OccupancyConfig) -> jnp.ndarray:
 
 
 def update(field, params: dict, state: OccupancyState, cfg: OccupancyConfig, rng: jax.Array) -> OccupancyState:
-    """Requery cell densities at jittered centers, EMA-fold."""
+    """Requery cell densities at jittered centers, EMA-fold.
+
+    Contract: every cell is re-queried each call (unlike NGP's random
+    subset), so the EMA (`max(ema * decay, sigma)`) is pure hysteresis
+    against jitter flicker; `field` only needs a `.density(params, pts)`
+    method.  Cost is one R^3-point density query — callers amortize it over
+    `update_interval` training steps.  Returns a new state with step + 1;
+    step > 0 is what arms `bitfield` (and thereby compaction + the
+    redistribute stage) after the all-occupied warmup."""
     pts = cell_centers(cfg)
     jitter = (jax.random.uniform(rng, pts.shape) - 0.5) / cfg.resolution
     sigma, _ = field.density(params, jnp.clip(pts + jitter, 0.0, 1.0 - 1e-6))
@@ -77,11 +85,41 @@ def bitfield(state: OccupancyState, cfg: OccupancyConfig) -> jnp.ndarray:
 
 
 def point_liveness(bits: jnp.ndarray, points_unit: jnp.ndarray, resolution: int) -> jnp.ndarray:
-    """Pure cull stage: bits (R^3,) bool, points (N,3) in [0,1) -> live (N,)."""
+    """Pure cull stage: per-point occupancy lookup.
+
+    Contract: ``bits`` is the (R^3,) bool bitfield from :func:`bitfield`
+    (x-major flattening — ``flat = x*R*R + y*R + z``), ``points_unit`` is
+    (..., 3) in [0,1) (any leading batch shape); returns bool with the
+    leading shape.  Points exactly on the upper face clip into the last
+    cell, matching :func:`repro.core.rendering.normalize_points`' half-open
+    convention.  No gradients flow through the lookup (it is a gather of a
+    bool array) — callers use it as a mask, never as a differentiable term.
+    """
     r = resolution
     cell = jnp.clip((points_unit * r).astype(jnp.int32), 0, r - 1)
-    flat = cell[:, 0] * r * r + cell[:, 1] * r + cell[:, 2]
+    flat = cell[..., 0] * r * r + cell[..., 1] * r + cell[..., 2]
     return bits[flat]
+
+
+def ray_segment_mask(bits: jnp.ndarray, unit_midpoints: jnp.ndarray, resolution: int) -> jnp.ndarray:
+    """Per-ray live-segment extraction for the redistribute stage.
+
+    ``unit_midpoints`` (B, M, 3): unit-cube coords of the midpoints of M
+    equal-width probe bins along each ray (out-of-box probes should be
+    masked by the caller's AABB test — this function only answers the
+    occupancy question).  Returns the (B, M) bool live-bin mask: runs of
+    True are the ray's live segments, and the mask's row-sums are the
+    per-ray live lengths in units of the bin width.  This is the
+    piecewise-constant sampling density that
+    ``RenderPipeline.redistribute`` inverts (inverse-CDF placement) — in
+    the training hot path the pipeline derives the mask from the cull
+    stage's jittered candidate samples (probe == candidates, so coverage is
+    unbiased across steps); this standalone form serves offline analysis
+    and custom probe placements.  The contract is deliberately a *mask*,
+    not a start/end run-length list: fixed shape (B, M) keeps consumers
+    jit-stable at any occupancy.
+    """
+    return point_liveness(bits, unit_midpoints, resolution)
 
 
 def occupied_mask_fn(state: OccupancyState, cfg: OccupancyConfig):
@@ -91,4 +129,8 @@ def occupied_mask_fn(state: OccupancyState, cfg: OccupancyConfig):
 
 
 def occupancy_fraction(state: OccupancyState, cfg: OccupancyConfig) -> jnp.ndarray:
+    """Fraction of cells above threshold — the *cell-level* sparsity.  Note
+    this is not the same number as the pipeline's per-sample live fraction
+    (rays oversample near the camera and the AABB test composes in), which
+    is why the trainer budgets from the measured batch fraction instead."""
     return jnp.mean((state.density_ema > cfg.density_threshold).astype(jnp.float32))

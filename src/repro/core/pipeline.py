@@ -9,6 +9,13 @@ rendering into explicit stages so the field only ever sees live points:
 
     1. generate_samples   rays × ts -> world points, per-sample dirs
     2. cull               AABB test + occupancy-bitfield lookup -> live mask
+   2b. redistribute       (optional) re-spend each ray's freed sample budget
+                          on its live occupancy segments: inverse-CDF
+                          placement over the per-ray live-bin mask, reduced
+                          per-ray count S' = budget // B so the total point
+                          budget stays at or below the pow2 bucket; emits
+                          per-sample quadrature deltas (dt is no longer the
+                          uniform stratum width)
     3. compact            stable argsort to a fixed, jit-stable `budget` of
                           points, live-first in Morton (Z-order) key order
                           so spatially adjacent points share kernel blocks
@@ -17,6 +24,7 @@ rendering into explicit stages so the field only ever sees live points:
                           default via the fused path (one encode pass over
                           all grids, pre-sorted BUM backward)
     5. scatter/composite  scatter sigma/rgb back to B×S, volume-render
+                          (variable-spacing quadrature when 2b ran)
 
 The budget is a *static* python int (it fixes compiled shapes); callers pick
 it from a measured live fraction — `suggest_budget` buckets to powers of two
@@ -39,6 +47,7 @@ import jax.numpy as jnp
 from . import occupancy as occ_lib
 from . import rendering as _r
 from ..kernels.volume_render import ops as vr_ops
+from ..kernels.volume_render import ref as vr_ref
 from ..kernels.fused_path import ref as fp_ref
 
 
@@ -56,6 +65,7 @@ def suggest_budget(
     *,
     headroom: float = 1.3,
     min_budget: int = 512,
+    max_budget: int | None = None,
 ) -> int:
     """Pow2-bucketed point budget for a measured live fraction.
 
@@ -63,12 +73,21 @@ def suggest_budget(
     O(log2(n_total / min_budget)); headroom absorbs drift between the
     measurement (e.g. occupancy fraction at the last grid update) and the
     live fraction of the current batch.
+
+    max_budget models a hard per-step point ceiling (on-device memory or
+    latency caps).  When it clamps the bucket *below* the live count the
+    uniform sampler must drop live points every step (systematic Morton-tail
+    truncation — see `compact`); the redistribute stage is the graceful
+    alternative, spending exactly the ceiling with zero overflow.
     """
     want = int(n_total * min(1.0, max(0.0, live_fraction) * headroom))
     b = min_budget
     while b < want:
         b *= 2
-    return min(b, n_total)
+    b = min(b, n_total)
+    if max_budget is not None:
+        b = min(b, int(max_budget))
+    return b
 
 
 class CompactionPlan(NamedTuple):
@@ -87,17 +106,38 @@ class RenderPipeline:
     dense path always uses the plain per-grid query.  On the ref backend the
     fused query is bit-identical to the unfused one, so this knob changes
     where the work happens, never the numbers.
+
+    redistribute: adaptive ray marching (stage 2b).  With a bitfield and a
+    budget present, each ray's fixed S-sample budget is re-spent on its live
+    occupancy segments: S' = budget // B samples per ray, placed by
+    inverse-CDF over the per-ray liveness of the uniform candidate samples,
+    so every point the compacted shade stage pays for lands in live space
+    with finer stratification — and the point budget is spent evenly across
+    rays (no overflow ever), instead of Morton-tail truncation when a hard
+    budget ceiling bites.  When the knob is off (the default), every code
+    path is byte-for-byte the uniform sampler: the stage is never traced,
+    deltas fall back to the `jnp.diff` stratum widths, and results are
+    bit-identical to a pipeline built without the knob.
     """
 
-    def __init__(self, field, cfg: _r.RenderConfig, *, fused_path: bool = True):
+    def __init__(self, field, cfg: _r.RenderConfig, *, fused_path: bool = True,
+                 redistribute: bool = False):
         self.field = field
         self.cfg = cfg
         self.fused_path = fused_path and hasattr(field, "query_fused")
+        self.redistribute_on = redistribute
 
     # ---- stage 1: sample generation ----
 
     def generate_samples(self, origins, dirs, ts):
-        """-> (flat world points (N,3), flat dirs (N,3), unit coords (N,3))."""
+        """-> (flat world points (N,3), flat dirs (N,3), unit coords (N,3)).
+
+        N = B·S flattens row-major (ray-major, then sample), so index
+        `i*S + k` is ray i's k-th sample — the scatter in stage 5 relies on
+        this layout to reshape back to (B, S).  `unit` is the [0,1)^3 coord
+        every grid lookup (hash encode, occupancy, Morton key) consumes;
+        world points only feed the AABB test.  Works for any ts — uniform
+        strata or stage 2b's adaptive placements."""
         points = origins[:, None, :] + ts[..., None] * dirs[:, None, :]  # (B,S,3)
         flat_pts = points.reshape(-1, 3)
         flat_dirs = jnp.broadcast_to(dirs[:, None, :], points.shape).reshape(-1, 3)
@@ -117,6 +157,68 @@ class RenderPipeline:
         if mask_fn is not None:  # composes with the bitfield when both given
             live = live & mask_fn(unit)
         return live
+
+    # ---- stage 2b: redistribute (adaptive ray marching) ----
+
+    def redistribute(self, ts, live, *, n_out: int | None = None):
+        """Inverse-CDF sample redistribution over live occupancy segments.
+
+        `live` (B, S) is the cull-stage liveness of the incoming stratified
+        samples (stage 2 on the uniform candidates) — it doubles as the
+        per-ray occupancy probe.  Using the *jittered* samples as probes
+        (instead of, say, fixed stratum midpoints) matters: a stratum that
+        partially overlaps a live cell flickers live/dead with the
+        stratified jitter, so every region receives samples in expectation
+        across steps.  A deterministic probe would carve permanent per-ray
+        blind spots into training — live surface slivers between two dead
+        probe points would never be sampled on any step.
+
+        The live mask becomes each ray's piecewise-constant live-length CDF
+        over the S strata, and `n_out` stratified samples are placed by
+        inverting it.  Rays with no live stratum fall back to the uniform
+        CDF (they carry no radiance; compositing still needs monotone ts).
+        In-stratum jitter is likewise reused from `ts`, so the stage is a
+        pure deterministic function of (ts, live) — no extra rng plumbing,
+        and training streams stay reproducible under suspend/resume.
+
+        Returns (ts_new (B, n_out), deltas (B, n_out)):
+
+        * ts_new is ascending per ray and lands only in live strata (up to
+          the uniform fallback);
+        * deltas are the per-sample quadrature widths dt_k = h / (p_k · S')
+          — the live arc length each sample represents; summed per ray they
+          equal the ray's live length, so `composite` integrates the same
+          transmittance as a dense quadrature over live space (dead gaps
+          between segments contribute exactly zero because no sample's dt
+          spans them).
+        """
+        b, s = ts.shape
+        n_out = s if n_out is None else int(n_out)
+        near, far = self.cfg.near, self.cfg.far
+        h = (far - near) / s
+
+        w = live.astype(jnp.float32)                       # (B, S)
+        total = jnp.sum(w, axis=-1, keepdims=True)
+        w = jnp.where(total > 0, w, 1.0)                   # dead ray -> uniform
+        pdf = w / jnp.sum(w, axis=-1, keepdims=True)
+        cdf = jnp.cumsum(pdf, axis=-1)
+
+        # stratified u in (0,1): stratum index from n_out, jitter from ts
+        jitter = (ts[:, :n_out] - near) / (far - near) * s - jnp.arange(n_out)
+        jitter = jnp.clip(jitter, 0.0, 1.0 - 1e-6)
+        u = (jnp.arange(n_out) + jitter) / n_out           # (B, n_out) ascending
+        u = u * cdf[:, -1:]                                # absorb cumsum rounding
+
+        j = jax.vmap(lambda c, uu: jnp.searchsorted(c, uu, side="right"))(cdf, u)
+        j = jnp.clip(j, 0, s - 1)
+        cdf_lo = jnp.where(
+            j > 0, jnp.take_along_axis(cdf, jnp.maximum(j - 1, 0), axis=-1), 0.0
+        )
+        p = jnp.maximum(jnp.take_along_axis(pdf, j, axis=-1), 1e-12)
+        frac = jnp.clip((u - cdf_lo) / p, 0.0, 1.0 - 1e-6)
+        ts_new = near + (j.astype(jnp.float32) + frac) * h
+        deltas = h / (p * n_out)
+        return ts_new, deltas
 
     # ---- stage 3: compact ----
 
@@ -151,15 +253,32 @@ class RenderPipeline:
     # ---- stage 4: shade ----
 
     def shade(self, params, unit, dirs, fused: bool = False):
+        """Field query on (already compacted) unit coords -> (sigma, rgb).
+
+        fused=True routes through `field.query_fused` (one encode pass over
+        all grids, pre-sorted BUM backward) — bit-identical to the per-grid
+        query on the ref backend, so the flag is a placement choice, not a
+        numerics choice.  The stage is agnostic to how `unit` was sampled;
+        it sees only the compacted point set."""
         if fused:
             return self.field.query_fused(params, unit, dirs)
         return self.field.query(params, unit, dirs)
 
     # ---- stage 5: scatter + composite ----
 
-    def composite(self, sigma, rgb, ts):
+    def composite(self, sigma, rgb, ts, deltas=None):
+        """Volume-render (B·S,) sigma / (B·S,3) rgb along ts (B,S).
+
+        deltas: optional per-sample quadrature widths (B,S) — required after
+        `redistribute`, where consecutive ts may straddle dead gaps that the
+        naive `diff(ts)` spacing would wrongly charge to the preceding
+        sample's density.  With deltas=None the uniform-sampler convention
+        applies unchanged (diff, last stratum padded with the mean width) —
+        bit-identical to the pre-redistribute pipeline.
+        """
         b, s = ts.shape
-        deltas = jnp.diff(ts, axis=-1, append=ts[:, -1:] + (self.cfg.far - self.cfg.near) / s)
+        if deltas is None:
+            deltas = vr_ref.uniform_deltas(ts, self.cfg.far - self.cfg.near)
         out = vr_ops.composite(sigma.reshape(b, s), rgb.reshape(b, s, 3), deltas, ts)
         color = out.color
         if self.cfg.white_background:
@@ -185,11 +304,36 @@ class RenderPipeline:
         budget: int | None = None,
     ):
         """Render a ray batch.  budget MUST be a static python int (or None
-        for the dense path) — it fixes the compiled point-batch shape."""
+        for the dense path) — it fixes the compiled point-batch shape.
+
+        With `redistribute` on (and a bitfield + budget present), stage 2b
+        replaces ts by S' = budget // B adaptively placed samples per ray
+        before compaction, and the effective budget becomes B·S' ≤ budget —
+        the reported `points_queried` can only shrink.  `live_fraction` then
+        reports the probe's (uniform-equivalent) live fraction so budget
+        controllers keep seeing the quantity they calibrate against.
+        """
         b, s = ts.shape
         n = b * s
         flat_pts, flat_dirs, unit = self.generate_samples(origins, dirs, ts)
         live = self.cull(flat_pts, unit, bitfield=bitfield, mask_fn=mask_fn)
+
+        deltas = probe_live_frac = None
+        # redistribution allocates per ray, so it needs budget >= B for at
+        # least one sample each; below that, fall through to plain uniform
+        # compaction, which honors sub-B budgets by truncation instead of
+        # silently exceeding the ceiling
+        if (self.redistribute_on and bitfield is not None
+                and budget is not None and int(budget) >= b):
+            # the uniform candidates' liveness doubles as the (jittered)
+            # occupancy probe; their mean is exactly the uniform sampler's
+            # live fraction — what the budget controller calibrates against
+            probe_live_frac = jnp.mean(live.astype(jnp.float32))
+            s = min(s, min(int(budget), n) // b)
+            ts, deltas = self.redistribute(ts, live.reshape(b, -1), n_out=s)
+            budget = n = b * s
+            flat_pts, flat_dirs, unit = self.generate_samples(origins, dirs, ts)
+            live = self.cull(flat_pts, unit, bitfield=bitfield, mask_fn=mask_fn)
 
         if budget is None:
             sigma, rgb = self.shade(params, unit, flat_dirs)
@@ -212,9 +356,12 @@ class RenderPipeline:
             n_live, overflow = plan.n_live, plan.overflow
             points_queried = budget
 
-        out = self.composite(sigma, rgb, ts)
+        out = self.composite(sigma, rgb, ts, deltas)
         out.update(
-            live_fraction=jnp.mean(live.astype(jnp.float32)),
+            live_fraction=(
+                probe_live_frac if probe_live_frac is not None
+                else jnp.mean(live.astype(jnp.float32))
+            ),
             n_live=n_live,
             overflow=overflow,
             points_queried=jnp.asarray(points_queried, jnp.int32),

@@ -72,7 +72,14 @@ def pixel_rays(pose: jnp.ndarray, px: jnp.ndarray, py: jnp.ndarray, h: int, w: i
 # --- sampling ----------------------------------------------------------------
 
 def sample_ts(rng: jax.Array | None, n_rays: int, cfg: RenderConfig) -> jnp.ndarray:
-    """Stratified sample distances (B, S) in [near, far]."""
+    """Stratified sample distances (B, S) in [near, far].
+
+    One sample per uniform stratum of width (far-near)/S; with rng=None the
+    stratum midpoints (deterministic eval path).  These are the *uniform*
+    sampler's positions — the pipeline's redistribute stage (2b) consumes
+    their in-stratum jitter to place its adaptive samples, so the two
+    samplers share one rng stream and stay reproducible together.
+    """
     s = cfg.n_samples
     edges = jnp.linspace(cfg.near, cfg.far, s + 1)
     lo, hi = edges[:-1], edges[1:]

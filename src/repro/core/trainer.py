@@ -115,6 +115,25 @@ class TrainerConfig:
     # unfused compacted path on the ref backend; turn off to time/debug the
     # PR 1 per-grid shade.
     fused_path: bool = True
+    # occupancy-guided sample redistribution (pipeline stage 2b): re-spend
+    # each ray's freed sample budget on its live segments — S' = budget // B
+    # samples per ray, inverse-CDF placed, per-sample quadrature deltas.
+    # Points per step can only shrink (B*S' <= budget) while live regions
+    # get finer stratification.  Enable it when a hard max_budget ceiling
+    # bites (uniform compaction then truncates live points; BENCH_sampler
+    # measures +1.8 dB held-out at equal points) — at generous budgets keep it off:
+    # the uniform sampler is already unbiased there and shares its
+    # quadrature with the dense eval renderer.  Off is the bit-exact
+    # baseline.  Interaction with the budget-keyed step
+    # cache: S' derives from the *static* budget at trace time, so the
+    # existing (freeze_color, freeze_density, budget, use_bits) key already
+    # pins the redistributed shapes — no new cache dimension.
+    redistribute: bool = False
+    # hard per-step point ceiling (on-device memory/latency cap).  When it
+    # clamps the bucket below the live count, the uniform sampler must drop
+    # live points every step (Morton-tail truncation); redistribution
+    # spends exactly the ceiling instead, evenly across rays.
+    max_budget: int | None = None
 
 
 def _branch_update(i: int, freq: float) -> bool:
@@ -143,7 +162,10 @@ class Instant3DTrainer:
         self.opt = AdamW(
             lr=cfg.lr, b2=cfg.b2, eps=cfg.eps, weight_decay=0.0, lr_scale_fn=lr_scale
         )
-        self.pipeline = RenderPipeline(field, cfg.render, fused_path=cfg.fused_path)
+        self.pipeline = RenderPipeline(
+            field, cfg.render, fused_path=cfg.fused_path,
+            redistribute=cfg.redistribute,
+        )
         self._step_fns = {}
         # host-side live-fraction estimate driving the compaction budget;
         # starts at 1.0 (occupancy warmup = all-occupied => dense)
@@ -236,6 +258,7 @@ class Instant3DTrainer:
         budget = suggest_budget(
             self._live_frac, n_total,
             headroom=self.cfg.budget_headroom, min_budget=self.cfg.min_budget,
+            max_budget=self.cfg.max_budget,
         )
         return None if budget >= n_total else budget
 

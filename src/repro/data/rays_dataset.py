@@ -17,18 +17,25 @@ class RaySampler:
     reproduce the exact stream (checkpoint/restart invariant).
     """
 
-    def __init__(self, ds: SceneDataset):
-        v, h, w = ds.images.shape[:3]
+    def __init__(self, ds: SceneDataset, views=None):
+        """views: optional iterable of view indices to draw from (default:
+        all).  Restricting the training pool lets benchmarks hold out eval
+        views without rebuilding the dataset; the ray stream for a given
+        (views, key) is deterministic either way."""
+        all_v, h, w = ds.images.shape[:3]
+        views = list(range(all_v)) if views is None else sorted(views)
+        v = len(views)
         origins = np.zeros((v, h * w, 3), np.float32)
         dirs = np.zeros((v, h * w, 3), np.float32)
         py, px = jnp.meshgrid(jnp.arange(h), jnp.arange(w), indexing="ij")
         px, py = px.reshape(-1), py.reshape(-1)
-        for i in range(v):
-            o, d = rendering.pixel_rays(jnp.asarray(ds.poses[i]), px, py, h, w, ds.focal)
+        for i, vi in enumerate(views):
+            o, d = rendering.pixel_rays(jnp.asarray(ds.poses[vi]), px, py, h, w, ds.focal)
             origins[i], dirs[i] = np.asarray(o), np.asarray(d)
+        self.views = views
         self.origins = jnp.asarray(origins.reshape(-1, 3))
         self.dirs = jnp.asarray(dirs.reshape(-1, 3))
-        self.rgb = jnp.asarray(ds.images.reshape(-1, 3))
+        self.rgb = jnp.asarray(ds.images[views].reshape(-1, 3))
         self.n = self.rgb.shape[0]
 
     def sample(self, rng: jax.Array, batch: int) -> rendering.RayBatch:

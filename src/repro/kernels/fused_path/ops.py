@@ -63,6 +63,31 @@ def make_fused_encode(
     resolutions: static per-level grid resolutions (shared by all grids).
     table_sizes: one table size per grid (e.g. (T_density, T_color)).
     Returns encode(points (N,3), *tables[(L,T_g,F)]) -> tuple[(N, L*F)].
+
+    Contracts the rest of the stack relies on (previously only recorded in
+    CHANGES.md):
+
+    * **Input ordering.** `points` should be Morton (Z-order) sorted — the
+      pipeline's compact stage guarantees this (uniform or redistributed
+      samples alike).  Correctness never depends on it, but both wins do:
+      block-level corner-read dedup on Pallas (FMU) and the quasi-sorted
+      address streams that make the forward's stable argsort cheap.
+    * **Presorted invariant.** The forward stashes, per grid, the *stable*
+      argsort of the canonical corner-address stream (level-major, then
+      point, then corner).  The VJP replays exactly that permutation and
+      commits through `merged_scatter_add(presorted=True)`, which skips its
+      own argsort.  Because a stable sort of an identical key stream is an
+      identical permutation, the committed gradient is bit-identical to the
+      unfused merged-backward path — property-tested in
+      tests/test_grid_update.py.
+    * **Sentinel invariant.** Pallas block padding uses
+      `hash_encode.PAD_SENTINEL` (-1.0): kernels must map sentinel rows to
+      zero output while reading row 0 of the table (a harmless in-bounds
+      address), so padded lanes neither contribute features nor fault.
+      Regression-tested in tests/test_hash_encode.py.
+    * **Residual footprint.** weights (L,N,8) plus two (L·N·8,) index
+      streams per grid stay live from forward to backward; see ROADMAP for
+      the recompute-in-backward policy on memory-bound devices.
     """
     from .. import resolve_backend
     be = resolve_backend(backend)

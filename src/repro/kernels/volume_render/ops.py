@@ -7,6 +7,10 @@ The Pallas compositing kernel is forward-only (and does not materialize
 per-sample weights); a custom VJP backs it with the autodiff of the jnp
 reference so pallas backends stay trainable.  Callers needing `weights`
 (e.g. distortion losses) should route that computation through 'ref'.
+
+`deltas` is a first-class per-sample array on every backend (kernel and
+ref alike): the adaptive sampler's variable-spacing quadrature flows
+through the same entry point as the uniform sampler's diff-based widths.
 """
 from __future__ import annotations
 

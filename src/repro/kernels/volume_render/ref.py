@@ -10,6 +10,13 @@ along each ray:
 
 Also returns depth (= sum w_k t_k) and opacity (= sum w_k), used for the
 paper's Fig. 5 depth-PSNR instrumentation.
+
+delta_k is per-sample, not a constant step: the quadrature is exact for any
+partition, so callers may pass variable-spacing widths — the adaptive
+sampler (pipeline stage 2b) feeds dt_k = live arc length represented by
+sample k, under which dead gaps between occupancy segments contribute
+exactly zero to the transmittance sum.  `uniform_deltas` builds the
+uniform-sampler convention (diff, last stratum padded to the mean width).
 """
 from __future__ import annotations
 
@@ -25,8 +32,18 @@ class RenderOut(NamedTuple):
     weights: jnp.ndarray  # (R, S)
 
 
+def uniform_deltas(ts: jnp.ndarray, span: float) -> jnp.ndarray:
+    """Uniform-sampler segment widths: diff(ts), last sample padded with the
+    mean stratum width span/S.  ts (R,S), span = far - near."""
+    s = ts.shape[-1]
+    return jnp.diff(ts, axis=-1, append=ts[..., -1:] + span / s)
+
+
 def composite(sigma: jnp.ndarray, rgb: jnp.ndarray, deltas: jnp.ndarray, ts: jnp.ndarray) -> RenderOut:
-    """sigma (R,S), rgb (R,S,3), deltas (R,S), ts (R,S) -> RenderOut."""
+    """sigma (R,S), rgb (R,S,3), deltas (R,S), ts (R,S) -> RenderOut.
+
+    deltas may be any positive per-sample widths (see module docstring);
+    uniform and adaptive partitions share this one compositor."""
     tau = sigma.astype(jnp.float32) * deltas.astype(jnp.float32)  # (R, S)
     cum = jnp.cumsum(tau, axis=-1)
     transmittance = jnp.exp(-(cum - tau))  # exclusive cumsum: T_k

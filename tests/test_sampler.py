@@ -1,0 +1,266 @@
+"""Adaptive sample redistribution (pipeline stage 2b) + variable-dt rendering.
+
+Covers the ISSUE 4 contracts:
+
+* redistribute places samples only in live strata, monotone in t, with
+  positive per-sample quadrature deltas summing to the ray's live length;
+* with every stratum live the stage degenerates to the uniform sampler;
+* variable-dt compositing matches a dense uniform quadrature (and the
+  analytic transmittance) on a piecewise-constant density;
+* with the knob off the stage is never traced and training is bit-identical
+  run-to-run on the ref backend (the uniform-fallback equivalence);
+* the full pipeline keeps the compacted point budget at or below the
+  caller's budget with zero overflow, and reports the uniform-equivalent
+  live fraction;
+* suggest_budget honors a hard max_budget ceiling.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Field, FieldConfig, Instant3DTrainer, TrainerConfig, occupancy
+from repro.core.pipeline import RenderPipeline, suggest_budget
+from repro.core import rendering
+from repro.core.rendering import RenderConfig, sample_ts
+from repro.data import build_dataset, RaySampler
+from repro.kernels.volume_render import ref as vr_ref
+
+FIELD_CFG = FieldConfig(n_levels=4, max_resolution=64, log2_table_density=12,
+                        log2_table_color=10)
+RCFG = RenderConfig(n_samples=16)
+OCFG = occupancy.OccupancyConfig(resolution=8)
+
+
+def _rays(rng, b):
+    origins = jnp.asarray(rng.uniform(-0.5, 0.5, (b, 3)).astype(np.float32))
+    origins = origins.at[:, 2].set(4.0)  # look down at the box from above
+    dirs = jnp.asarray(rng.normal(size=(b, 3)).astype(np.float32))
+    dirs = dirs.at[:, 2].set(-jnp.abs(dirs[:, 2]) - 1.0)
+    return origins, dirs / jnp.linalg.norm(dirs, axis=-1, keepdims=True)
+
+
+def _half_occupied():
+    centers = occupancy.cell_centers(OCFG)
+    return (centers[:, 2] < 0.5).reshape(-1)
+
+
+def _candidate_liveness(pipe, origins, dirs, ts, bits):
+    """Stage 1+2 on the uniform candidates, reshaped per ray (B, S)."""
+    flat_pts, _, unit = pipe.generate_samples(origins, dirs, ts)
+    live = pipe.cull(flat_pts, unit, bitfield=bits)
+    return live.reshape(ts.shape)
+
+
+def test_redistribute_places_samples_in_live_strata(rng):
+    field = Field(FIELD_CFG)
+    b = 48
+    origins, dirs = _rays(rng, b)
+    ts = sample_ts(jax.random.PRNGKey(1), b, RCFG)
+    bits = _half_occupied()
+    pipe = RenderPipeline(field, RCFG, redistribute=True)
+    live = _candidate_liveness(pipe, origins, dirs, ts, bits)
+
+    n_out = 8
+    ts_new, deltas = pipe.redistribute(ts, live, n_out=n_out)
+    assert ts_new.shape == deltas.shape == (b, n_out)
+    assert bool(jnp.all(jnp.diff(ts_new, axis=-1) >= 0)), "ts must stay sorted"
+    assert bool(jnp.all(deltas > 0))
+    assert bool(jnp.all((ts_new >= RCFG.near) & (ts_new <= RCFG.far)))
+
+    has_live = np.asarray(jnp.any(live, axis=-1))
+    assert has_live.any(), "test geometry should give some rays live strata"
+
+    # exact invariant: every sample of a ray with live strata lands in a
+    # live stratum (the CDF's support)
+    h = (RCFG.far - RCFG.near) / RCFG.n_samples
+    stratum = jnp.clip(((ts_new - RCFG.near) / h).astype(jnp.int32), 0,
+                       RCFG.n_samples - 1)
+    in_live = jnp.take_along_axis(live, stratum, axis=-1)
+    assert bool(jnp.all(in_live[has_live])), "sample placed outside live strata"
+
+    # per-sample quadrature widths sum to the ray's live arc length
+    live_len = jnp.sum(live.astype(jnp.float32), axis=-1) * h
+    np.testing.assert_allclose(
+        np.asarray(jnp.sum(deltas, axis=-1))[has_live],
+        np.asarray(live_len)[has_live], rtol=1e-4,
+    )
+
+
+def test_ray_segment_mask_contract(rng):
+    """The standalone per-ray probe API agrees with the flat cull lookup and
+    its row-sums are the per-ray live lengths in bin-width units."""
+    bits = _half_occupied()
+    b, m = 8, 12
+    unit = jnp.asarray(rng.uniform(0, 1, (b, m, 3)).astype(np.float32))
+    mask = occupancy.ray_segment_mask(bits, unit, OCFG.resolution)
+    assert mask.shape == (b, m) and mask.dtype == jnp.bool_
+    flat = occupancy.point_liveness(bits, unit.reshape(-1, 3), OCFG.resolution)
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(flat).reshape(b, m))
+    # row-sums * bin width = live arc length, the quantity redistribute's
+    # CDF normalizes by
+    np.testing.assert_array_equal(
+        np.asarray(jnp.sum(mask, axis=-1)),
+        np.asarray(flat).reshape(b, m).sum(-1),
+    )
+
+
+def test_redistribute_uniform_when_all_live(rng):
+    """All strata live => the adaptive placement IS the uniform stratified
+    placement, with uniform deltas."""
+    field = Field(FIELD_CFG)
+    b, s = 16, RCFG.n_samples
+    ts = sample_ts(jax.random.PRNGKey(2), b, RCFG)
+    pipe = RenderPipeline(field, RCFG, redistribute=True)
+
+    ts_new, deltas = pipe.redistribute(ts, jnp.ones((b, s), bool))
+    np.testing.assert_allclose(np.asarray(ts_new), np.asarray(ts), atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(deltas), (RCFG.far - RCFG.near) / s, rtol=1e-5
+    )
+
+
+def test_variable_dt_composite_matches_dense_quadrature():
+    """Piecewise-constant sigma on [a, b]: adaptive non-uniform samples with
+    per-sample deltas must agree with a dense uniform quadrature and the
+    analytic transmittance."""
+    near, far = 2.0, 6.0
+    a, b, c = 3.0, 4.0, 1.7          # density c inside [a, b], zero outside
+    rgb_val = jnp.asarray([0.8, 0.4, 0.2])
+
+    def sigma_of(t):
+        return jnp.where((t >= a) & (t < b), c, 0.0)
+
+    # dense uniform reference: 4096 samples over [near, far]
+    s_ref = 4096
+    ts_ref = (near + (jnp.arange(s_ref) + 0.5) * (far - near) / s_ref)[None, :]
+    deltas_ref = vr_ref.uniform_deltas(ts_ref, far - near)
+    rgb_ref = jnp.broadcast_to(rgb_val, (1, s_ref, 3))
+    out_ref = vr_ref.composite(sigma_of(ts_ref), rgb_ref, deltas_ref, ts_ref)
+
+    # adaptive: 12 samples, all inside [a, b], quadratically clustered toward
+    # `a` — a deliberately non-uniform partition with per-sample widths
+    n = 12
+    edges = a + (b - a) * (jnp.linspace(0.0, 1.0, n + 1) ** 2)
+    ts_ad = ((edges[:-1] + edges[1:]) / 2)[None, :]
+    deltas_ad = (edges[1:] - edges[:-1])[None, :]
+    rgb_ad = jnp.broadcast_to(rgb_val, (1, n, 3))
+    out_ad = vr_ref.composite(sigma_of(ts_ad), rgb_ad, deltas_ad, ts_ad)
+
+    analytic_opacity = 1.0 - np.exp(-c * (b - a))
+    np.testing.assert_allclose(float(out_ad.opacity[0]), analytic_opacity, rtol=2e-3)
+    np.testing.assert_allclose(float(out_ref.opacity[0]), analytic_opacity, rtol=2e-3)
+    np.testing.assert_allclose(
+        np.asarray(out_ad.color), np.asarray(out_ref.color), rtol=5e-3
+    )
+    # depth: same weight mass, placed inside [a, b]
+    np.testing.assert_allclose(
+        float(out_ad.depth[0]), float(out_ref.depth[0]), rtol=5e-3
+    )
+
+
+def test_pipeline_redistribute_budget_and_telemetry(rng):
+    field = Field(FIELD_CFG)
+    params = field.init(jax.random.PRNGKey(0))
+    b = 32
+    origins, dirs = _rays(rng, b)
+    ts = sample_ts(jax.random.PRNGKey(1), b, RCFG)
+    bits = _half_occupied()
+    pipe = RenderPipeline(field, RCFG, redistribute=True)
+
+    # budget below n_rays: redistribution needs >= 1 sample/ray, so it must
+    # fall back to uniform compaction and honor the ceiling by truncation
+    tiny = pipe(params, origins, dirs, ts, bitfield=bits, budget=b // 2)
+    assert int(tiny["points_queried"]) == b // 2
+
+    budget = 200  # not ray-divisible: S' = 200 // 32 = 6, points = 192
+    out = pipe(params, origins, dirs, ts, bitfield=bits, budget=budget)
+    assert int(out["points_queried"]) == (budget // b) * b
+    assert int(out["points_queried"]) <= budget
+    assert int(out["overflow"]) == 0
+    # live_fraction reports the uniform candidates' liveness (what the
+    # budget controller calibrates against), not the ~1.0 liveness of the
+    # redistributed samples — it must match the dense path's number exactly
+    dense = RenderPipeline(field, RCFG)(params, origins, dirs, ts, bitfield=bits)
+    np.testing.assert_allclose(
+        float(out["live_fraction"]), float(dense["live_fraction"]), atol=0,
+    )
+    assert out["rgb"].shape == (b, 3)
+    assert bool(jnp.all(jnp.isfinite(out["rgb"])))
+
+    # differentiable end to end
+    def loss(p):
+        o = pipe(p, origins, dirs, ts, bitfield=bits, budget=budget)
+        return jnp.mean(o["rgb"] ** 2)
+
+    grads = jax.grad(loss)(params)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree_util.tree_leaves(grads))
+
+
+def test_suggest_budget_max_ceiling():
+    n = 4096
+    assert suggest_budget(0.5, n, max_budget=1024) == 1024
+    assert suggest_budget(0.05, n, max_budget=1024) == 512  # cap not binding
+    assert suggest_budget(1.0, n) == n                      # no cap: unchanged
+
+
+def _short_train(redistribute: bool, forbid_stage: bool = False, **cfg_kw):
+    ds = build_dataset(seed=0, n_views=4, h=16, w=16, cfg=RCFG, gt_samples=48)[1]
+    tcfg = TrainerConfig(
+        n_rays=128, iters=24, render=RCFG, min_budget=128,
+        occ=occupancy.OccupancyConfig(resolution=8, update_interval=8, warmup_steps=8),
+        redistribute=redistribute, **cfg_kw,
+    )
+    tr = Instant3DTrainer(Field(FIELD_CFG), tcfg)
+    if forbid_stage:
+        def _boom(*a, **k):
+            raise AssertionError("redistribute stage traced with the knob off")
+        tr.pipeline.redistribute = _boom
+    state = tr.init(jax.random.PRNGKey(0))
+    state, hist = tr.train(state, RaySampler(ds), iters=tcfg.iters, log_every=8)
+    return state, hist
+
+
+def test_redistribute_off_is_bit_identical_uniform_fallback():
+    """Knob off => the stage is never traced (the uniform path is untouched
+    code) and two identical runs produce bit-identical parameters."""
+    s1, h1 = _short_train(False, forbid_stage=True)
+    s2, h2 = _short_train(False)
+    for (p, a), b in zip(jax.tree_util.tree_leaves_with_path(s1.params),
+                         jax.tree_util.tree_leaves(s2.params)):
+        assert bool(np.array_equal(np.asarray(a), np.asarray(b))), f"param drift at {p}"
+    assert h1["loss"] == h2["loss"]
+
+
+def test_trainer_redistribute_end_to_end():
+    """Training with the knob on engages after occupancy warmup, never
+    spends more points than the uniform-compacted budget would, and honors
+    a hard budget ceiling with zero overflow."""
+    state, hist = _short_train(True, max_budget=256)
+    assert all(np.isfinite(hist["loss"]))
+    assert hist["points_queried"][-1] <= 256
+    assert hist["overflow_total"] == 0
+
+
+def test_trainer_redistribute_matches_uniform_before_occupancy():
+    """Until the first occupancy update the bitfield is inactive and both
+    samplers must take the identical dense path — step-for-step bit equality
+    through the warmup phase."""
+    ds = build_dataset(seed=0, n_views=4, h=16, w=16, cfg=RCFG, gt_samples=48)[1]
+
+    def warmup_train(redistribute):
+        tcfg = TrainerConfig(
+            n_rays=128, iters=6, render=RCFG,
+            occ=occupancy.OccupancyConfig(resolution=8, update_interval=8,
+                                          warmup_steps=8),
+            redistribute=redistribute,
+        )
+        tr = Instant3DTrainer(Field(FIELD_CFG), tcfg)
+        state = tr.init(jax.random.PRNGKey(0))
+        state, _ = tr.train(state, RaySampler(ds), iters=6, log_every=6)
+        return state
+
+    s_off, s_on = warmup_train(False), warmup_train(True)
+    for (p, a), b in zip(jax.tree_util.tree_leaves_with_path(s_off.params),
+                         jax.tree_util.tree_leaves(s_on.params)):
+        assert bool(np.array_equal(np.asarray(a), np.asarray(b))), f"warmup drift at {p}"

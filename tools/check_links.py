@@ -1,0 +1,52 @@
+"""CI docs-check: fail on broken relative links in the repo's markdown.
+
+Scans README.md, ROADMAP.md, and docs/*.md for [text](target) links and
+verifies every relative target exists on disk (anchors are stripped;
+http(s)/mailto links are out of scope).  Usage:
+
+    python tools/check_links.py            # check the default set
+    python tools/check_links.py FILE...    # check specific files
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+
+
+def check(md: Path) -> list[str]:
+    try:
+        shown = md.relative_to(ROOT)
+    except ValueError:  # explicit argument outside the repo root
+        shown = md
+    broken = []
+    for n, line in enumerate(md.read_text().splitlines(), 1):
+        for target in LINK.findall(line):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if rel and not (md.parent / rel).exists():
+                broken.append(f"{shown}:{n}: broken link -> {target}")
+    return broken
+
+
+def main(argv: list[str]) -> int:
+    files = [Path(a).resolve() for a in argv] if argv else [
+        ROOT / "README.md", ROOT / "ROADMAP.md", *sorted((ROOT / "docs").glob("*.md")),
+    ]
+    missing = [str(f) for f in files if not f.exists()]
+    broken = [b for f in files if f.exists() for b in check(f)]
+    for msg in missing:
+        print(f"missing file: {msg}")
+    for msg in broken:
+        print(msg)
+    print(f"checked {len(files) - len(missing)} files: "
+          f"{len(broken)} broken links, {len(missing)} missing files")
+    return 1 if broken or missing else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
