@@ -167,6 +167,7 @@ def run(smoke: bool = False) -> None:
     dedup = _dedup_stats(tr_f, st_f, sam_f)
 
     result = {
+        "smoke": smoke,
         "iters": iters,
         "unique_corner_reads": dedup,
         "budget": int(budget) if budget else None,

@@ -119,6 +119,7 @@ def run(smoke: bool = False) -> None:
                   if render[s]["adaptive"] >= ref_psnr - 0.1), s_full)
 
     result = {
+        "smoke": smoke,
         "iters": train_iters,
         "n_rays": BASE_TRAIN.n_rays,
         "n_samples": s_full,

@@ -29,6 +29,10 @@ def main():
     ap.add_argument("--slice", type=int, default=8, help="iterations per time slice")
     ap.add_argument("--hw", type=int, default=24)
     ap.add_argument("--max-resident", type=int, default=None)
+    ap.add_argument("--max-cohort", type=int, default=None,
+                    help="train-cohort cap (default unlimited; 1 = pure time-slicing)")
+    ap.add_argument("--dense-render", action="store_true",
+                    help="serve views dense instead of redistributed")
     args = ap.parse_args()
 
     render = RenderConfig(n_samples=16)
@@ -42,7 +46,9 @@ def main():
 
     print(f"building {args.scenes} procedural scenes ({args.hw}x{args.hw})...")
     service = ReconstructionService(slice_iters=args.slice,
-                                    max_resident=args.max_resident)
+                                    max_resident=args.max_resident,
+                                    max_cohort=args.max_cohort,
+                                    redistributed_render=not args.dense_render)
     datasets = {}
     for i in range(args.scenes):
         _scene, ds = build_dataset(seed=i, n_views=6, h=args.hw, w=args.hw,
@@ -55,10 +61,11 @@ def main():
     held_out = 0  # every served render targets view 0, scored against its GT
 
     def hook(svc, event):
-        sid = event["trained"]
-        # ask for a fresh view of whichever scene just trained a slice
-        if sid is not None and svc.sessions[sid].step % (2 * args.slice) == 0:
-            svc.request_render(sid, datasets[sid].poses[held_out])
+        # ask for a fresh view of every scene that just trained a slice
+        # (one quantum advances a whole cohort when configs match)
+        for sid in event["cohort"]:
+            if svc.sessions[sid].step % (2 * args.slice) == 0:
+                svc.request_render(sid, datasets[sid].poses[held_out])
         for r in event["results"]:
             gt = datasets[r.session_id].images[held_out]
             psnr = float(losses.psnr(np.asarray(r.rgb), gt))

@@ -66,6 +66,52 @@ def eval_render_fn(field_cfg, render_cfg: rendering.RenderConfig, chunk: int):
     return _EVAL_RENDER_CACHE[key]
 
 
+def make_redistributed_render_chunk(field_cfg, render_cfg: rendering.RenderConfig,
+                                    occ_cfg: occupancy.OccupancyConfig, budget: int):
+    """Occupancy-redistributed chunk renderer (pipeline stage 2b) built purely
+    from configs: (params, origins (N,3), dirs (N,3), ts (N,S), occ_ema,
+    occ_step) -> (rgb, depth).
+
+    Instead of shading all N·S dense samples, the cull liveness of the dense
+    candidates becomes each ray's occupancy probe and S' = budget // N
+    redistributed samples are shaded per ray — the same quadrature the
+    redistributing trainer marches, which is what closes the train/eval
+    quadrature mismatch for served views.  The occupancy state rides along as
+    plain arrays (jit-traceable), so callers holding only a published
+    snapshot (params + occ EMA) can render without a live trainer; while
+    occ_step == 0 the bitfield reads all-occupied and redistribution
+    degrades gracefully to a uniform S'-sample preview.
+
+    fused_path stays OFF here: the fused query's forward-pass corner-stream
+    argsort buys its cost back in the pre-sorted backward merge, and a
+    render has no backward — the plain per-grid query shades the compacted
+    set cheaper."""
+    pipeline = RenderPipeline(field_lib.Field(field_cfg), render_cfg,
+                              fused_path=False, redistribute=True)
+
+    def render_chunk(params, origins, dirs, ts, occ_ema, occ_step):
+        bits = occupancy.bitfield(occupancy.OccupancyState(occ_ema, occ_step), occ_cfg)
+        out = pipeline(params, origins, dirs, ts, bitfield=bits, budget=int(budget))
+        return out["rgb"], out["depth"]
+
+    return render_chunk
+
+
+_REDIST_RENDER_CACHE: dict[tuple, Any] = {}
+
+
+def redistributed_render_fn(field_cfg, render_cfg: rendering.RenderConfig,
+                            occ_cfg: occupancy.OccupancyConfig,
+                            chunk: int, samples_per_ray: int):
+    """Jitted `make_redistributed_render_chunk`; budget = chunk·samples_per_ray."""
+    key = (field_cfg, render_cfg, occ_cfg, int(chunk), int(samples_per_ray))
+    if key not in _REDIST_RENDER_CACHE:
+        _REDIST_RENDER_CACHE[key] = jax.jit(make_redistributed_render_chunk(
+            field_cfg, render_cfg, occ_cfg, int(chunk) * int(samples_per_ray)
+        ))
+    return _REDIST_RENDER_CACHE[key]
+
+
 def image_rays(pose, h: int, w: int, focal: float, eval_chunk: int):
     """Full-image rays padded to a chunk quantum.
 
@@ -150,18 +196,145 @@ class TrainState(NamedTuple):
     step: int
 
 
+def _make_opt(cfg: TrainerConfig) -> AdamW:
+    def lr_scale(path):
+        # grids at full lr, MLPs at 0.1x — the NGP recipe
+        return 1.0 if any("grid" in p for p in path) else 0.1
+
+    return AdamW(
+        lr=cfg.lr, b2=cfg.b2, eps=cfg.eps, weight_decay=0.0, lr_scale_fn=lr_scale
+    )
+
+
+def _make_raw_step(field, opt, pipeline, cfg: TrainerConfig, freeze_color: bool,
+                   freeze_density: bool, budget: int | None, use_bits: bool):
+    """Unjitted single-member train step: (params, opt_state, batch, ts,
+    occ_ema) -> (params, opt_state, loss, aux).  The one construction point
+    for both the legacy per-instance jit (`Instant3DTrainer.step_fn`) and the
+    member-axis cohort step (`cohort_step_fn`), so they always compute the
+    same function."""
+    decomposed = field.cfg.decomposed
+
+    def loss_fn(params, batch: rendering.RayBatch, ts, occ_ema):
+        if freeze_color and decomposed:
+            params = dict(params)
+            params["color_grid"] = jax.lax.stop_gradient(params["color_grid"])
+        if freeze_density:
+            params = dict(params)
+            params["density_grid"] = jax.lax.stop_gradient(params["density_grid"])
+        bits = None
+        if use_bits:
+            # zero-init EMA is exactly zero until the first update folds
+            # (trunc_exp densities are strictly positive afterwards), so
+            # max>0 recovers the step for bitfield's all-occupied warmup
+            # even when callers invoke step_fn directly on a fresh state
+            folded = (jnp.max(occ_ema) > 0.0).astype(jnp.int32)
+            state = occupancy.OccupancyState(occ_ema, folded)
+            bits = occupancy.bitfield(state, cfg.occ)
+        out = pipeline(
+            params, batch.origins, batch.dirs, ts, bitfield=bits, budget=budget
+        )
+        aux = {
+            "live_fraction": out["live_fraction"],
+            "overflow": out["overflow"],
+            "points_queried": out["points_queried"],
+        }
+        return losses.mse(out["rgb"], batch.rgb_gt), aux
+
+    def step(params, opt_state, batch, ts, occ_ema):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, ts, occ_ema
+        )
+        mask = jax.tree.map(lambda _: True, params)
+        if freeze_color:
+            mask["color_grid"] = False
+        if freeze_density:
+            mask["density_grid"] = False
+        params, opt_state = opt.apply(params, grads, opt_state, mask=mask)
+        return params, opt_state, loss, aux
+
+    return step
+
+
+# ---- cohort step / occupancy-update compile caches (module level) ----
+#
+# Keyed per (field config, trainer config, step variant, cohort size M):
+# every trainer instance and every train cohort with the same configs shares
+# ONE compiled step — sequential baselines re-built per scene (benchmarks,
+# parity checks) stop re-jitting, and a cohort re-formed under a different
+# lead session never recompiles.
+#
+# The member axis is batched with `jax.lax.map` (scan), NOT `jax.vmap`:
+# vmapping the step lets XLA:CPU re-tile the batched matmul/reduction
+# contractions, which reassociates float accumulation and drifts the cohort
+# ~1e-9 from the sequential path per step.  The scan body compiles once at
+# singleton shapes and is empirically invariant to the trip count M and the
+# member order (asserted by tests/test_serve3d_cohort.py), which is what
+# makes cohort == sequential EXACT — `Instant3DTrainer.train` routes through
+# the same construction at M=1.
+_COHORT_STEP_CACHE: dict[tuple, Any] = {}
+_OCC_UPDATE_CACHE: dict[tuple, Any] = {}
+
+
+def cohort_step_fn(field_cfg, cfg: TrainerConfig, freeze_color: bool,
+                   freeze_density: bool, budget: int | None, use_bits: bool,
+                   m: int):
+    """Jitted member-axis train step for an M-member cohort.
+
+    (params, opt_state, batch, occ_ema) carry a leading member axis of size
+    M; ts is shared (cohort members march the same step-keyed sample
+    stream).  Stacked params/opt buffers are donated — the cohort advances
+    in place like the per-instance step."""
+    key = (field_cfg, cfg, bool(freeze_color), bool(freeze_density),
+           budget, bool(use_bits), int(m))
+    if key not in _COHORT_STEP_CACHE:
+        field = field_lib.Field(field_cfg)
+        pipeline = RenderPipeline(
+            field, cfg.render, fused_path=cfg.fused_path,
+            redistribute=cfg.redistribute,
+        )
+        raw = _make_raw_step(field, _make_opt(cfg), pipeline, cfg,
+                             freeze_color, freeze_density, budget, use_bits)
+
+        def member_steps(params, opt_state, batch, ts, occ_ema):
+            return jax.lax.map(
+                lambda a: raw(a[0], a[1], a[2], ts, a[3]),
+                (params, opt_state, batch, occ_ema),
+            )
+
+        _COHORT_STEP_CACHE[key] = jax.jit(member_steps, donate_argnums=(0, 1))
+    return _COHORT_STEP_CACHE[key]
+
+
+def occ_update_fn(field_cfg, occ_cfg: occupancy.OccupancyConfig, m: int):
+    """Jitted member-axis occupancy update for an M-member cohort.
+
+    One compiled R^3-point density re-query serves the whole cohort (shared
+    jitter rng, per-member params/EMA) instead of M eager op-by-op sweeps —
+    the single biggest fixed cost the cohort amortizes.  Bit-identical to
+    the eager `occupancy.update` at every M (the update is gather + matmul +
+    elementwise max; no batched reassociation)."""
+    key = (field_cfg, occ_cfg, int(m))
+    if key not in _OCC_UPDATE_CACHE:
+        field = field_lib.Field(field_cfg)
+
+        def update_members(params, ema, step, rng):
+            return jax.lax.map(
+                lambda a: occupancy.update(
+                    field, a[0], occupancy.OccupancyState(a[1], a[2]), occ_cfg, rng
+                ),
+                (params, ema, step),
+            )
+
+        _OCC_UPDATE_CACHE[key] = jax.jit(update_members)
+    return _OCC_UPDATE_CACHE[key]
+
+
 class Instant3DTrainer:
     def __init__(self, field: field_lib.Field, cfg: TrainerConfig):
         self.field = field
         self.cfg = cfg
-
-        def lr_scale(path):
-            # grids at full lr, MLPs at 0.1x — the NGP recipe
-            return 1.0 if any("grid" in p for p in path) else 0.1
-
-        self.opt = AdamW(
-            lr=cfg.lr, b2=cfg.b2, eps=cfg.eps, weight_decay=0.0, lr_scale_fn=lr_scale
-        )
+        self.opt = _make_opt(cfg)
         self.pipeline = RenderPipeline(
             field, cfg.render, fused_path=cfg.fused_path,
             redistribute=cfg.redistribute,
@@ -191,47 +364,8 @@ class Instant3DTrainer:
 
     def _make_step(self, freeze_color: bool, freeze_density: bool = False,
                    budget: int | None = None, use_bits: bool = False):
-        cfg, opt, pipeline = self.cfg, self.opt, self.pipeline
-        decomposed = self.field.cfg.decomposed
-
-        def loss_fn(params, batch: rendering.RayBatch, ts, occ_ema):
-            if freeze_color and decomposed:
-                params = dict(params)
-                params["color_grid"] = jax.lax.stop_gradient(params["color_grid"])
-            if freeze_density:
-                params = dict(params)
-                params["density_grid"] = jax.lax.stop_gradient(params["density_grid"])
-            bits = None
-            if use_bits:
-                # zero-init EMA is exactly zero until the first update folds
-                # (trunc_exp densities are strictly positive afterwards), so
-                # max>0 recovers the step for bitfield's all-occupied warmup
-                # even when callers invoke step_fn directly on a fresh state
-                folded = (jnp.max(occ_ema) > 0.0).astype(jnp.int32)
-                state = occupancy.OccupancyState(occ_ema, folded)
-                bits = occupancy.bitfield(state, cfg.occ)
-            out = pipeline(
-                params, batch.origins, batch.dirs, ts, bitfield=bits, budget=budget
-            )
-            aux = {
-                "live_fraction": out["live_fraction"],
-                "overflow": out["overflow"],
-                "points_queried": out["points_queried"],
-            }
-            return losses.mse(out["rgb"], batch.rgb_gt), aux
-
-        def step(params, opt_state, batch, ts, occ_ema):
-            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-                params, batch, ts, occ_ema
-            )
-            mask = jax.tree.map(lambda _: True, params)
-            if freeze_color:
-                mask["color_grid"] = False
-            if freeze_density:
-                mask["density_grid"] = False
-            params, opt_state = opt.apply(params, grads, opt_state, mask=mask)
-            return params, opt_state, loss, aux
-
+        step = _make_raw_step(self.field, self.opt, self.pipeline, self.cfg,
+                              freeze_color, freeze_density, budget, use_bits)
         return jax.jit(step, donate_argnums=(0, 1))
 
     def step_fn(self, freeze_color: bool, freeze_density: bool = False,
@@ -272,82 +406,28 @@ class Instant3DTrainer:
         log_every: int = 50,
         callback=None,
     ) -> tuple[TrainState, dict]:
-        cfg = self.cfg
-        iters = iters if iters is not None else cfg.iters
-        key = jax.random.PRNGKey(cfg.seed)
-        history = {"step": [], "loss": [], "live_fraction": [], "wall_s": [],
-                   "points_queried": [], "overflow": []}
-        # per-step overflow scalars kept on device (no per-step host sync);
-        # folded into history at the end so no overflowing step goes unseen
-        overflow_accum = []
-        t0 = time.perf_counter()
+        """Advance training by `iters` iterations.
 
-        params, opt_state, occ_state = state.params, state.opt_state, state.occ_state
-        # bitfield is meaningless until the first EMA fold (init is zeros);
-        # render dense until then, and budget from the measured live fraction
-        occ_updates = int(occ_state.step) if cfg.use_occupancy else 0
-        if occ_updates == 0:
-            self._live_frac = 1.0  # fresh state: forget any previous run
-            self._overflow_window = []
-        for local_i in range(iters):
-            i = state.step + local_i
-            key_batch, key_ts, key_occ = jax.random.split(jax.random.fold_in(key, i), 3)
-            batch = sampler.sample(key_batch, cfg.n_rays)
-            ts = rendering.sample_ts(key_ts, cfg.n_rays, cfg.render)
+        Implemented as a train cohort of one: the exact same member-axis
+        compiled step and batched occupancy update that advance an M-scene
+        cohort in serve3d run here at M=1, so a session trained inside a
+        cohort and one trained alone produce bit-identical streams."""
+        states, hists = train_cohort(
+            [self], [state], [sampler],
+            iters=iters, log_every=log_every, callback=callback,
+        )
+        return states[0], hists[0]
 
-            update_color = _branch_update(i, cfg.f_color)
-            update_density = _branch_update(i, cfg.f_density)
-            freeze_color = (not update_color) and self.field.cfg.decomposed
-            freeze_density = not update_density
-
-            use_bits = cfg.use_occupancy and occ_updates > 0
-            step = self.step_fn(
-                freeze_color, freeze_density, self._current_budget(use_bits), use_bits
-            )
-            params, opt_state, loss, aux = step(
-                params, opt_state, batch, ts, occ_state.density_ema
-            )
-            overflow_accum.append(aux["overflow"])
-            self._overflow_window.append(aux["overflow"])
-            del self._overflow_window[: -cfg.occ.update_interval]
-
-            if cfg.use_occupancy and i >= cfg.occ.warmup_steps and (i + 1) % cfg.occ.update_interval == 0:
-                occ_state = occupancy.update(self.field, params, occ_state, cfg.occ, key_occ)
-                occ_updates += 1
-                # re-measure the batch live fraction at the occupancy cadence
-                # (one host sync per update, not per step) to size the budget;
-                # overflow here means the live set outgrew the bucket between
-                # measurements — widen beyond the measurement so the next
-                # bucket has room
-                if use_bits:
-                    measured = float(aux["live_fraction"])
-                    # consider every step since the last update, not just this
-                    # one — per-step live counts fluctuate with stratified ts.
-                    # The window lives on the instance so it spans train()
-                    # calls (time-sliced sessions see the same history).
-                    recent = self._overflow_window[-cfg.occ.update_interval:]
-                    if recent and int(jnp.sum(jnp.stack(recent))) > 0:
-                        measured = min(1.0, measured * 2.0)
-                    self._live_frac = measured
-
-            if (local_i + 1) % log_every == 0 or local_i == iters - 1:
-                history["step"].append(i + 1)
-                history["loss"].append(float(loss))
-                history["live_fraction"].append(float(aux["live_fraction"]))
-                history["points_queried"].append(int(aux["points_queried"]))
-                history["overflow"].append(int(aux["overflow"]))
-                history["wall_s"].append(time.perf_counter() - t0)
-                if callback is not None:
-                    callback(i + 1, params, history)
-
-        if overflow_accum:
-            all_overflow = jnp.stack(overflow_accum)
-            history["overflow_total"] = int(jnp.sum(all_overflow))
-            history["overflow_steps"] = int(jnp.sum(all_overflow > 0))
-        else:
-            history["overflow_total"] = 0
-            history["overflow_steps"] = 0
-        return TrainState(params, opt_state, occ_state, state.step + iters), history
+    def step_cache_keys(self) -> set:
+        """Compiled step-variant keys for this trainer's configs (freeze
+        flags, budget, use_bits, cohort size) — the observable for "did this
+        run recompile?" probes now that step compilation is shared module-
+        wide (benchmarks/bench_pipeline.py uses it to detect budget-bucket
+        widening)."""
+        return {
+            k[2:] for k in _COHORT_STEP_CACHE
+            if k[0] == self.field.cfg and k[1] == self.cfg
+        }
 
     # ---- suspend / resume (host-state hooks for time-sliced sessions) ----
 
@@ -416,3 +496,307 @@ class Instant3DTrainer:
             far = self.cfg.render.far
             dep_ps.append(float(losses.psnr(jnp.asarray(dep / far), jnp.asarray(ds.depths[v] / far))))
         return {"psnr_rgb": float(np.mean(rgb_ps)), "psnr_depth": float(np.mean(dep_ps))}
+
+
+# ---- cohort driver: lockstep training of M same-config sessions ----
+
+
+class _CohortGroup:
+    """One stacked sub-cohort: members that currently share a compiled step
+    variant (same use_bits + point budget).  Holds member-axis-stacked
+    params/opt/occupancy plus the stacked ray pools their batches gather
+    from.  The partition over groups only shifts when per-member budgets
+    drift apart at an occupancy update, so stacked state persists across
+    iterations — no per-step stack/unstack traffic."""
+
+    def __init__(self, members, params, opt_state, ema, occ_step, samplers):
+        self.members = list(members)          # global member indices, in order
+        self.params = params                  # leading axis = len(members)
+        self.opt_state = opt_state
+        self.ema = ema                        # (G, R^3)
+        self.occ_step = occ_step              # (G,) int32
+        self.use_bits = False
+        self.budget = None
+        self.last_aux = None
+        ns = {samplers[k].n for k in self.members}
+        if len(self.members) > 1 and len(ns) == 1:
+            # equal ray pools: one shared index draw gathers every member's
+            # batch (identical indices to each member's own sampler.sample —
+            # same key, same bound).  Only worth the stacked pool copy for a
+            # real cohort; singletons (every plain train() call) gather from
+            # the sampler's own arrays with zero extra device residency.
+            self.pool = tuple(
+                jnp.stack([getattr(samplers[k], f) for k in self.members])
+                for f in ("origins", "dirs", "rgb")
+            )
+        else:
+            self.pool = None
+
+    def member_tree(self, tree, k: int):
+        r = self.members.index(k)
+        return jax.tree.map(lambda x: x[r], tree)
+
+    def sample(self, samplers, key_batch, n_rays: int) -> rendering.RayBatch:
+        if self.pool is not None:
+            idx = samplers[self.members[0]].sample_idx(key_batch, n_rays)
+            o, d, rgb = self.pool
+            return rendering.RayBatch(o[:, idx], d[:, idx], rgb[:, idx])
+        per = [samplers[k].sample(key_batch, n_rays) for k in self.members]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+
+def _partition_members(trainers, use_occupancy, occ_updates):
+    """(use_bits, budget) step-variant key per member -> ordered partition."""
+    keys = []
+    for k, tr in enumerate(trainers):
+        use_bits = use_occupancy and occ_updates[k] > 0
+        keys.append((use_bits, tr._current_budget(use_bits)))
+    part: list[tuple[tuple, list[int]]] = []
+    for k, key in enumerate(keys):
+        grouped = next((g for g in part if g[0] == key), None)
+        if grouped is None:
+            part.append((key, [k]))
+        else:
+            grouped[1].append(k)
+    return part
+
+
+def train_cohort(
+    trainers: list,
+    states: list,
+    samplers: list,
+    iters: int | None = None,
+    log_every: int = 50,
+    callback=None,
+) -> tuple[list, list]:
+    """Advance M same-config training sessions in lockstep.
+
+    All members must share (field config, trainer config) and sit at the
+    same absolute step; their params, optimizer state, occupancy EMAs and
+    ray batches are stacked along a leading member axis and one compiled
+    member-axis step (`cohort_step_fn`) advances the whole cohort per
+    iteration.  Per-member host bookkeeping (live-fraction estimate,
+    overflow window — each `trainers[k]`'s instance state, exactly what
+    suspend/resume round-trips) is maintained identically to M sequential
+    `Instant3DTrainer.train` runs, and the compiled body is the same one
+    `train` itself runs at M=1, so the cohort is bit-identical to
+    sequential time-slicing — params, optimizer moments and occupancy EMA
+    (asserted in tests and BENCH_serve3d).
+
+    Members whose measured point budgets drift apart at an occupancy update
+    split into separately-stacked sub-cohorts (`_CohortGroup`) and keep
+    advancing in lockstep; the shared-key sample stream, occupancy cadence
+    and freeze schedule depend only on the absolute step, so the split
+    changes where the work happens, never the numbers.
+
+    Returns (new_states, histories), parallel to the inputs.
+    """
+    m = len(trainers)
+    assert m == len(states) == len(samplers), "trainers/states/samplers must align"
+    lead = trainers[0]
+    cfg, field_cfg = lead.cfg, lead.field.cfg
+    for t in trainers[1:]:
+        if t.cfg != cfg or t.field.cfg != field_cfg:
+            raise ValueError("cohort members must share field and trainer configs")
+    step0 = states[0].step
+    if any(s.step != step0 for s in states):
+        raise ValueError("cohort members must be at the same training step")
+    iters = iters if iters is not None else cfg.iters
+    key = jax.random.PRNGKey(cfg.seed)
+    t0 = time.perf_counter()
+
+    histories = [
+        {"step": [], "loss": [], "live_fraction": [], "wall_s": [],
+         "points_queried": [], "overflow": []}
+        for _ in range(m)
+    ]
+    # per-step overflow kept on device as stacked (M,) scalars — ONE list
+    # append per iteration, no per-member slicing in the hot loop; member
+    # columns are materialized only at the occupancy cadence (budget check)
+    # and at the end (history totals + each trainer's rolling window)
+    overflow_accum: list = []
+
+    def window_sums(recent: list) -> np.ndarray:
+        """(M,) per-member sums over stacked window entries (one host sync)."""
+        if not recent:
+            return np.zeros((m,), np.int64)
+        return np.asarray(jnp.sum(jnp.stack(recent), axis=0))
+
+    # bitfield is meaningless until the first EMA fold (init is zeros);
+    # render dense until then, and budget from the measured live fraction
+    occ_updates = [
+        int(s.occ_state.step) if cfg.use_occupancy else 0 for s in states
+    ]
+    for k, tr in enumerate(trainers):
+        if occ_updates[k] == 0:
+            tr._live_frac = 1.0  # fresh state: forget any previous run
+            tr._overflow_window = []
+
+    # seed the stacked (M,)-per-entry overflow window from the members'
+    # per-trainer windows (they advance in lockstep, so equal lengths is the
+    # invariant; a ragged mix — cohort formed from sessions with unrelated
+    # histories — keeps exactness by degrading to per-member entries)
+    prior = [t._overflow_window for t in trainers]
+    if len({len(w) for w in prior}) == 1:
+        window = [
+            jnp.stack([jnp.asarray(w[j], jnp.int32) for w in prior])
+            for j in range(len(prior[0]))
+        ]
+    else:
+        window = None
+
+    def build_groups(partition, member_state):
+        groups = []
+        for (use_bits, budget), members in partition:
+            stackit = lambda f: jax.tree.map(
+                lambda *xs: jnp.stack(xs), *[f(k) for k in members]
+            )
+            g = _CohortGroup(
+                members,
+                stackit(lambda k: member_state[k][0]),
+                stackit(lambda k: member_state[k][1]),
+                jnp.stack([member_state[k][2] for k in members]),
+                jnp.stack([member_state[k][3] for k in members]),
+                samplers,
+            )
+            g.use_bits, g.budget = use_bits, budget
+            groups.append(g)
+        return groups
+
+    partition = _partition_members(trainers, cfg.use_occupancy, occ_updates)
+    groups = build_groups(
+        partition,
+        [(s.params, s.opt_state, s.occ_state.density_ema, s.occ_state.step)
+         for s in states],
+    )
+
+    for local_i in range(iters):
+        i = step0 + local_i
+        key_batch, key_ts, key_occ = jax.random.split(jax.random.fold_in(key, i), 3)
+        ts = rendering.sample_ts(key_ts, cfg.n_rays, cfg.render)
+
+        update_color = _branch_update(i, cfg.f_color)
+        update_density = _branch_update(i, cfg.f_density)
+        freeze_color = (not update_color) and field_cfg.decomposed
+        freeze_density = not update_density
+
+        want = _partition_members(trainers, cfg.use_occupancy, occ_updates)
+        if [p[0] for p in want] != [(g.use_bits, g.budget) for g in groups] or \
+           [p[1] for p in want] != [g.members for g in groups]:
+            member_state = {}
+            for g in groups:
+                for k in g.members:
+                    member_state[k] = (
+                        g.member_tree(g.params, k), g.member_tree(g.opt_state, k),
+                        g.member_tree(g.ema, k), g.member_tree(g.occ_step, k),
+                    )
+            groups = build_groups(want, member_state)
+
+        where = [None] * m  # member -> (group, row) for this iteration
+        for g in groups:
+            batch = g.sample(samplers, key_batch, cfg.n_rays)
+            fn = cohort_step_fn(field_cfg, cfg, freeze_color, freeze_density,
+                                g.budget, g.use_bits, len(g.members))
+            g.params, g.opt_state, loss, aux = fn(
+                g.params, g.opt_state, batch, ts, g.ema
+            )
+            g.last_aux = aux
+            g.last_loss = loss
+            for r, k in enumerate(g.members):
+                where[k] = (g, r)
+        # one stacked (M,) overflow entry per iteration (the single-group
+        # common case appends the step's own aux with no regather)
+        if len(groups) == 1:
+            ov = groups[0].last_aux["overflow"]
+        else:
+            ov = jnp.stack([where[k][0].last_aux["overflow"][where[k][1]]
+                            for k in range(m)])
+        overflow_accum.append(ov)
+        if window is not None:
+            window.append(ov)
+            del window[: -cfg.occ.update_interval]
+        else:
+            for k in range(m):
+                trainers[k]._overflow_window.append(ov[k])
+                del trainers[k]._overflow_window[: -cfg.occ.update_interval]
+
+        if cfg.use_occupancy and i >= cfg.occ.warmup_steps and \
+                (i + 1) % cfg.occ.update_interval == 0:
+            # overflow since the last update, summed per member (one host
+            # sync): overflow means the live set outgrew the bucket between
+            # measurements — widen beyond the measurement so the next bucket
+            # has room.  The window spans train()/cohort calls (time-sliced
+            # sessions see the same history as one long sequential run).
+            if window is not None:
+                recent_sums = window_sums(window[-cfg.occ.update_interval:])
+            for g in groups:
+                upd = occ_update_fn(field_cfg, cfg.occ, len(g.members))
+                new_occ = upd(g.params, g.ema, g.occ_step, key_occ)
+                g.ema, g.occ_step = new_occ.density_ema, new_occ.step
+                # re-measure the batch live fraction at the occupancy cadence
+                # (one host sync per update, not per step) to size the budget
+                if g.use_bits:
+                    live = np.asarray(g.last_aux["live_fraction"])
+                for r, k in enumerate(g.members):
+                    occ_updates[k] += 1
+                    if g.use_bits:
+                        measured = float(live[r])
+                        # consider every step since the last update, not just
+                        # this one — per-step live counts fluctuate with
+                        # stratified ts
+                        if window is not None:
+                            overflowed = int(recent_sums[k]) > 0
+                        else:
+                            recent = trainers[k]._overflow_window[-cfg.occ.update_interval:]
+                            overflowed = bool(recent) and int(jnp.sum(jnp.stack(recent))) > 0
+                        if overflowed:
+                            measured = min(1.0, measured * 2.0)
+                        trainers[k]._live_frac = measured
+
+        if (local_i + 1) % log_every == 0 or local_i == iters - 1:
+            wall = time.perf_counter() - t0
+            for g in groups:
+                loss_h = np.asarray(g.last_loss)
+                live_h = np.asarray(g.last_aux["live_fraction"])
+                pts_h = np.asarray(g.last_aux["points_queried"])
+                ov_h = np.asarray(g.last_aux["overflow"])
+                for r, k in enumerate(g.members):
+                    h = histories[k]
+                    h["step"].append(i + 1)
+                    h["loss"].append(float(loss_h[r]))
+                    h["live_fraction"].append(float(live_h[r]))
+                    h["points_queried"].append(int(pts_h[r]))
+                    h["overflow"].append(int(ov_h[r]))
+                    h["wall_s"].append(wall)
+                    if callback is not None:
+                        callback(i + 1, g.member_tree(g.params, k), h)
+
+    new_states = [None] * m
+    for g in groups:
+        for k in g.members:
+            new_states[k] = TrainState(
+                g.member_tree(g.params, k),
+                g.member_tree(g.opt_state, k),
+                occupancy.OccupancyState(
+                    g.member_tree(g.ema, k), g.member_tree(g.occ_step, k)
+                ),
+                step0 + iters,
+            )
+    if overflow_accum:
+        all_overflow = jnp.stack(overflow_accum)          # (iters, M)
+        totals = np.asarray(jnp.sum(all_overflow, axis=0))
+        steps_ = np.asarray(jnp.sum(all_overflow > 0, axis=0))
+    else:
+        totals = steps_ = np.zeros((m,), np.int64)
+    for k, h in enumerate(histories):
+        h["overflow_total"] = int(totals[k])
+        h["overflow_steps"] = int(steps_[k])
+    if window is not None:
+        # hand each trainer back its per-member rolling window (one sync);
+        # plain ints sum identically, so suspend/resume and later singleton
+        # train() calls see exactly the sequential-path history
+        tail = np.asarray(jnp.stack(window)) if window else \
+            np.zeros((0, m), np.int64)
+        for k, tr in enumerate(trainers):
+            tr._overflow_window = [int(v) for v in tail[:, k]]
+    return new_states, histories

@@ -38,6 +38,14 @@ class RaySampler:
         self.rgb = jnp.asarray(ds.images[views].reshape(-1, 3))
         self.n = self.rgb.shape[0]
 
+    def sample_idx(self, rng: jax.Array, batch: int) -> jnp.ndarray:
+        """The batch's ray indices alone — `sample` == gathering these.
+        Exposed so a train cohort whose members share a pool size can draw
+        ONE index batch and gather every member's rays from stacked pools
+        (bit-identical to each member sampling on its own: same key, same
+        bound)."""
+        return jax.random.randint(rng, (batch,), 0, self.n)
+
     def sample(self, rng: jax.Array, batch: int) -> rendering.RayBatch:
-        idx = jax.random.randint(rng, (batch,), 0, self.n)
+        idx = self.sample_idx(rng, batch)
         return rendering.RayBatch(self.origins[idx], self.dirs[idx], self.rgb[idx])

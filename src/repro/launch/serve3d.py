@@ -3,12 +3,15 @@
     PYTHONPATH=src python -m repro.launch.serve3d \
         --scenes 4 --iters 128 --slice 16 --renders-per-scene 3
 
-Submits N procedural scene jobs, time-slices the device across their
-training sessions (round-robin or earliest-deadline-first, with a bounded
-resident set using the continuous-batching slot-reset idiom), and serves
-batched novel-view render requests mid-training from atomically published
-snapshots.  Prints per-session progress plus aggregate scenes/sec and
-render-latency percentiles.
+Submits N procedural scene jobs and advances them scene-parallel: sessions
+with matching configs form train cohorts that one member-axis compiled step
+advances together per quantum (bit-identical to time-slicing — disable with
+--max-cohort 1), with round-robin or earliest-deadline-first selection and a
+bounded resident set using the continuous-batching slot-reset idiom.
+Batched novel-view render requests are served mid-training from atomically
+published snapshots through the redistributed render path (--dense-render
+for the dense fallback).  Prints per-session progress plus aggregate
+scenes/sec and render-latency percentiles.
 """
 from __future__ import annotations
 
@@ -39,6 +42,9 @@ def build_service(args) -> tuple[ReconstructionService, dict]:
         policy=args.policy,
         max_resident=args.max_resident,
         persist_dir=args.persist_dir,
+        max_cohort=args.max_cohort,
+        redistributed_render=not args.dense_render,
+        render_samples_per_ray=args.render_spr,
     )
     datasets = {}
     for i in range(args.scenes):
@@ -66,6 +72,12 @@ def main(argv=None):
     ap.add_argument("--policy", choices=["round_robin", "edf"], default="round_robin")
     ap.add_argument("--max-resident", type=int, default=None,
                     help="device slots; extra sessions queue (slot-reset admission)")
+    ap.add_argument("--max-cohort", type=int, default=None,
+                    help="train-cohort cap (default unlimited; 1 = pure time-slicing)")
+    ap.add_argument("--dense-render", action="store_true",
+                    help="serve renders dense instead of redistributed")
+    ap.add_argument("--render-spr", type=int, default=None,
+                    help="redistributed samples per ray (default n_samples // 4)")
     ap.add_argument("--renders-per-scene", type=int, default=3,
                     help="novel-view render requests submitted per scene mid-training")
     ap.add_argument("--rays", type=int, default=256)
@@ -92,10 +104,10 @@ def main(argv=None):
     render_steps = {sid: slice_marks for sid in datasets}
 
     def hook(svc, event):
-        sid = event["trained"]
-        if sid is not None and event["step"] in render_steps[sid]:
-            k = svc.renderer.served.get(sid, 0) + svc.renderer.pending
-            svc.request_render(sid, novel[k % len(novel)])
+        for sid in event["cohort"]:  # cohort members share the slice boundary
+            if svc.sessions[sid].step in render_steps[sid]:
+                k = svc.renderer.served.get(sid, 0) + svc.renderer.pending
+                svc.request_render(sid, novel[k % len(novel)])
         for r in event["results"]:
             print(f"  render {r.session_id} req#{r.request_id} "
                   f"snapshot v{r.snapshot_version}@{r.snapshot_step} "

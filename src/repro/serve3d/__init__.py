@@ -5,5 +5,8 @@ snapshots while training continues)."""
 from .session import SceneSession, PENDING, ACTIVE, SUSPENDED, DONE  # noqa: F401
 from .scheduler import SessionScheduler  # noqa: F401
 from .snapshot import Snapshot, SnapshotStore  # noqa: F401
-from .render import RenderRequest, RenderResult, RenderService, batched_render_fn  # noqa: F401
+from .render import (  # noqa: F401
+    RenderRequest, RenderResult, RenderService,
+    batched_render_fn, batched_redistributed_render_fn,
+)
 from .service import ReconstructionService  # noqa: F401

@@ -18,6 +18,17 @@ stays O(log N) per geometry.
 A request whose session has not published a snapshot yet stays queued — the
 train -> snapshot -> serve pipeline never renders from uninitialized or
 half-written params.
+
+Redistributed serving (``samples_per_ray``): sessions registered with a
+per-ray sample budget are rendered through the RenderPipeline's
+redistribute stage (2b) instead of dense — the snapshot's occupancy EMA
+rebuilds the session's bitfield, the dense candidate liveness becomes each
+ray's probe, and only S' = samples_per_ray redistributed samples per ray
+are shaded.  At S' = S/4 the PR 4 render sweep shows equal PSNR, so p50
+latency drops with the shaded point count; and because a redistributing
+trainer marches the same quadrature, served views stop paying the
+train/eval quadrature mismatch.  ``samples_per_ray=None`` keeps the dense
+path (which remains the fallback for snapshots without occupancy).
 """
 from __future__ import annotations
 
@@ -31,7 +42,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import rendering
-from ..core.trainer import image_rays, make_render_chunk
+from ..core.trainer import (
+    image_rays, make_redistributed_render_chunk, make_render_chunk,
+)
 from .snapshot import SnapshotStore
 
 # vmapped-over-sessions flavor of the trainer's eval renderer: same
@@ -53,6 +66,24 @@ def batched_render_fn(field_cfg, render_cfg: rendering.RenderConfig,
     return _BATCH_RENDER_CACHE[key]
 
 
+def batched_redistributed_render_fn(field_cfg, render_cfg: rendering.RenderConfig,
+                                    occ_cfg, chunk: int, group: int,
+                                    samples_per_ray: int):
+    """Redistributed flavor of `batched_render_fn`: adds per-session
+    occupancy (ema (G,R^3), fold count (G,)) inputs and shades only
+    chunk·samples_per_ray points per session instead of chunk·S."""
+    key = (field_cfg, render_cfg, occ_cfg, int(chunk), int(group),
+           int(samples_per_ray))
+    if key not in _BATCH_RENDER_CACHE:
+        _BATCH_RENDER_CACHE[key] = jax.jit(
+            jax.vmap(make_redistributed_render_chunk(
+                field_cfg, render_cfg, occ_cfg,
+                int(chunk) * int(samples_per_ray)),
+                in_axes=(0, 0, 0, None, 0, 0))
+        )
+    return _BATCH_RENDER_CACHE[key]
+
+
 def _pow2_bucket(n: int) -> int:
     return 1 << (n - 1).bit_length()
 
@@ -65,6 +96,8 @@ class _SessionGeom:
     w: int
     focal: float
     eval_chunk: int
+    occ_cfg: Any = None            # OccupancyConfig for bitfield reconstruction
+    samples_per_ray: int | None = None  # None => dense serving
 
 
 @dataclass
@@ -103,9 +136,18 @@ class RenderService:
     # ---- registration / submission ----
 
     def register_session(self, session_id: str, field_cfg, render_cfg,
-                         h: int, w: int, focal: float, eval_chunk: int = 4096):
+                         h: int, w: int, focal: float, eval_chunk: int = 4096,
+                         occ_cfg=None, samples_per_ray: int | None = None):
+        """samples_per_ray: serve this session through the redistributed
+        render path at that per-ray point budget (requires occ_cfg so the
+        snapshot's EMA can be thresholded into a bitfield); None serves
+        dense."""
+        if samples_per_ray is not None and occ_cfg is None:
+            raise ValueError("samples_per_ray needs occ_cfg for the bitfield")
         self._geom[session_id] = _SessionGeom(
-            field_cfg, render_cfg, int(h), int(w), float(focal), int(eval_chunk)
+            field_cfg, render_cfg, int(h), int(w), float(focal), int(eval_chunk),
+            occ_cfg=occ_cfg,
+            samples_per_ray=None if samples_per_ray is None else int(samples_per_ray),
         )
 
     def submit(self, session_id: str, pose: np.ndarray) -> int:
@@ -135,24 +177,23 @@ class RenderService:
                 ready.append((req, snap))
         self._queue = waiting
 
-        # coalesce by compiled geometry: same field/render config + image dims
+        # coalesce by compiled geometry: same field/render config + image
+        # dims + serving path (dense vs redistributed at a given budget)
         groups: dict[tuple, list[tuple[RenderRequest, Any]]] = {}
         for req, snap in ready:
             g = self._geom[req.session_id]
-            key = (g.field_cfg, g.render_cfg, g.h, g.w, g.focal, g.eval_chunk)
+            key = (g.field_cfg, g.render_cfg, g.h, g.w, g.focal, g.eval_chunk,
+                   g.occ_cfg, g.samples_per_ray)
             groups.setdefault(key, []).append((req, snap))
 
         results = []
-        for (field_cfg, render_cfg, h, w, focal, eval_chunk), items in groups.items():
-            results.extend(
-                self._render_group(field_cfg, render_cfg, h, w, focal,
-                                   eval_chunk, items)
-            )
+        for key, items in groups.items():
+            results.extend(self._render_group(*key, items))
         results.sort(key=lambda r: r.request_id)
         return results
 
     def _render_group(self, field_cfg, render_cfg, h, w, focal, eval_chunk,
-                      items) -> list[RenderResult]:
+                      occ_cfg, samples_per_ray, items) -> list[RenderResult]:
         g_real = len(items)
         g_pad = _pow2_bucket(g_real)
         padded = items + [items[-1]] * (g_pad - g_real)
@@ -170,7 +211,20 @@ class RenderService:
             *[snap.params for _req, snap in padded],
         )
         ts = rendering.sample_ts(None, chunk, render_cfg)
-        fn = batched_render_fn(field_cfg, render_cfg, chunk, g_pad)
+
+        # redistributed path needs every snapshot to carry occupancy; a
+        # params-only snapshot (external publisher) falls back to dense
+        redistribute = (samples_per_ray is not None
+                        and all(snap.occ is not None for _req, snap in padded))
+        if redistribute:
+            occ_ema = jnp.stack([jnp.asarray(snap.occ[0]) for _req, snap in padded])
+            occ_step = jnp.asarray([int(snap.occ[1]) for _req, snap in padded],
+                                   jnp.int32)
+            fn_r = batched_redistributed_render_fn(
+                field_cfg, render_cfg, occ_cfg, chunk, g_pad, samples_per_ray)
+            fn = lambda p, o, d, t: fn_r(p, o, d, t, occ_ema, occ_step)
+        else:
+            fn = batched_render_fn(field_cfg, render_cfg, chunk, g_pad)
 
         rgb_chunks, dep_chunks = [], []
         for i in range(0, origins.shape[1], chunk):

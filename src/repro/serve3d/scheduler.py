@@ -18,6 +18,20 @@ completes, its slot is reset — the next queued session is admitted
 finished decode sequence being replaced by the next request.  The default
 slice length is a multiple of the occupancy update interval so budget
 re-measurement happens at the same absolute steps as in a sequential run.
+
+Train cohorts (``max_cohort``): sessions whose cohort keys match — same
+field/trainer configs and the same absolute step — are grouped around the
+quantum's primary session and advanced together through one member-axis
+compiled train step (`SceneSession.run_cohort_slice`), instead of each
+waiting for its own quantum.  Cohort training is bit-identical to the
+time-sliced path, so this changes throughput, never results.  Fairness
+under round-robin is preserved with slice credits: a session advanced as a
+non-primary cohort member is skipped once when its own turn comes, so mixed
+workloads (cohort + singleton sessions) still progress at equal
+iterations/sec per session.  Under EDF the urgent session stays primary and
+compatible sessions ride along — a deliberate throughput-over-latency
+trade, since the cohort slice advances M scenes in less wall time than M
+quanta but takes longer than the urgent session's solo slice.
 """
 from __future__ import annotations
 
@@ -26,14 +40,25 @@ from .session import ACTIVE, DONE, PENDING, SUSPENDED, SceneSession
 
 class SessionScheduler:
     def __init__(self, slice_iters: int = 16, policy: str = "round_robin",
-                 max_resident: int | None = None):
+                 max_resident: int | None = None,
+                 max_cohort: int | None = 1):
+        """max_cohort: largest train cohort formed around a quantum's primary
+        session — 1 disables cohort formation (pure time-slicing, the
+        PR 2 behavior), None removes the cap (every key-matching session
+        rides along)."""
         if policy not in ("round_robin", "edf"):
             raise ValueError(f"unknown policy {policy!r}")
         self.slice_iters = int(slice_iters)
         self.policy = policy
         self.max_resident = max_resident
+        self.max_cohort = max_cohort
         self.sessions: list[SceneSession] = []
         self._rr = 0  # round-robin cursor
+        # sessions advanced as non-primary cohort members hold a slice
+        # credit; the round-robin cursor skips them once so cohorts don't
+        # double-dip relative to singleton sessions
+        self._credit: dict[str, int] = {}
+        self.last_trained: list[SceneSession] = []
 
     # ---- membership ----
 
@@ -81,31 +106,70 @@ class SessionScheduler:
         if not live:
             return None
         if self.policy == "edf":
+            # deadlines outrank slice credits: an urgent session is never
+            # skipped because it already rode along in someone's cohort
             with_deadline = [s for s in live if s.deadline is not None]
             if with_deadline:
                 return min(
                     with_deadline, key=lambda s: s.submitted_at + s.deadline
                 )
-        # fair rotation over the stable session list
-        for _ in range(len(self.sessions)):
+        # fair rotation over the stable session list; one extra lap bounds
+        # the case where every live session holds a cohort credit
+        for _ in range(2 * len(self.sessions)):
             s = self.sessions[self._rr % len(self.sessions)]
             self._rr += 1
             if s.status == ACTIVE:
+                if self._credit.get(s.session_id, 0) > 0:
+                    self._credit[s.session_id] -= 1
+                    continue
                 return s
         return live[0]
 
+    def cohort_for(self, primary: SceneSession) -> list[SceneSession]:
+        """The quantum's train cohort: the primary plus every other ACTIVE
+        session with a matching cohort key, in stable submission order,
+        capped at max_cohort.  Size 1 == today's time-sliced path."""
+        cap = self.max_cohort if self.max_cohort is not None else len(self.sessions)
+        if cap <= 1:
+            return [primary]
+        key = primary.cohort_key()
+        members = [primary]
+        for s in self.sessions:
+            if len(members) >= cap:
+                break
+            if s is not primary and s.status == ACTIVE and s.cohort_key() == key:
+                members.append(s)
+        return members
+
     def step(self) -> SceneSession | None:
-        """Run one scheduling quantum: pick a session, train one slice,
-        reset its slot (admit the next queued job) if it finished."""
-        s = self.next_session()
-        if s is None:
+        """Run one scheduling quantum: pick a primary session, form its
+        train cohort, advance the whole cohort one slice, then reset the
+        slot of any member that finished (admitting the next queued job).
+        Returns the primary; `last_trained` lists every advanced session."""
+        primary = self.next_session()
+        if primary is None:
+            self.last_trained = []
             return None
-        s.run_slice(self.slice_iters)
-        if s.status == DONE:
-            if self.max_resident is not None and s.resident:
-                # bounded residency: a finished job must actually release its
-                # device footprint, not just stop counting against the cap
-                # (publish/evaluate still work from the suspended host tree)
-                s.suspend(block=False)
-            self._admit()  # slot reset: finished job's slot goes to the queue
-        return s
+        cohort = self.cohort_for(primary)
+        if len(cohort) == 1:
+            primary.run_slice(self.slice_iters)
+        else:
+            SceneSession.run_cohort_slice(cohort, self.slice_iters)
+            for rider in cohort[1:]:
+                self._credit[rider.session_id] = \
+                    self._credit.get(rider.session_id, 0) + 1
+        finished = False
+        for s in cohort:
+            if s.status == DONE:
+                finished = True
+                self._credit.pop(s.session_id, None)
+                if self.max_resident is not None and s.resident:
+                    # bounded residency: a finished job must actually release
+                    # its device footprint, not just stop counting against the
+                    # cap (publish/evaluate still work from the suspended
+                    # host tree)
+                    s.suspend(block=False)
+        if finished:
+            self._admit()  # slot reset: finished jobs' slots go to the queue
+        self.last_trained = cohort
+        return primary

@@ -7,12 +7,18 @@ One object owns the train -> snapshot -> serve loop:
     service.request_render(sid, pose)            # answered mid-training
     telemetry = service.run()
 
-Each `step()` is one scheduling quantum: the scheduler picks a live session
-(round-robin or EDF), trains one slice, publishes its params to the snapshot
-store (atomic swap), then the render service drains every answerable request
-— coalescing same-geometry requests across sessions into batched jitted
-renders.  Renders therefore always observe a consistent published snapshot
-while training keeps mutating the live (donated) buffers.
+Each `step()` is one scheduling quantum: the scheduler picks a primary live
+session (round-robin or EDF), forms its train cohort — every other active
+session with matching configs at the same step, advanced together through
+one member-axis compiled train step (scene-parallel by default; cap or
+disable with ``max_cohort``) — trains one slice, publishes each advanced
+session's params + occupancy to the snapshot store (atomic swap), then the
+render service drains every answerable request, coalescing same-geometry
+requests across sessions into batched jitted renders.  Renders observe a
+consistent published snapshot while training keeps mutating the live
+(donated) buffers, and by default are served through the redistributed
+render path (pipeline stage 2b at ``samples_per_ray`` points per ray)
+instead of dense.
 """
 from __future__ import annotations
 
@@ -32,16 +38,35 @@ class ReconstructionService:
         max_resident: int | None = None,
         persist_dir: str | None = None,
         snapshot_every: int = 1,
+        max_cohort: int | None = None,
+        redistributed_render: bool = True,
+        render_samples_per_ray: int | None = None,
     ):
         """snapshot_every: publish a session's snapshot every k-th slice it
-        trains (its final slice always publishes)."""
+        trains (its final slice always publishes).
+
+        max_cohort: largest train cohort the scheduler forms per quantum
+        (None = unlimited — the scene-parallel default; 1 = pure
+        time-slicing, the PR 2 behavior).  Cohort training is bit-identical
+        to time-slicing at equal per-scene iteration counts.
+
+        redistributed_render / render_samples_per_ray: serve novel views
+        through the occupancy-redistributed render path at S' samples per
+        ray instead of rendering dense.  Default S' = max(4, n_samples//4),
+        capped at n_samples: the PR 4 render sweep puts the equal-PSNR
+        point at ~4 redistributed samples/ray, so dividing by 4 only once
+        the dense ladder is past 16 keeps the ≤ 0.1 dB serving contract at
+        small S too."""
         self.store = SnapshotStore(persist_dir=persist_dir)
         self.renderer = RenderService(self.store)
         self.scheduler = SessionScheduler(
-            slice_iters=slice_iters, policy=policy, max_resident=max_resident
+            slice_iters=slice_iters, policy=policy, max_resident=max_resident,
+            max_cohort=max_cohort,
         )
         self.sessions: dict[str, SceneSession] = {}
         self.snapshot_every = max(1, int(snapshot_every))
+        self.redistributed_render = bool(redistributed_render)
+        self.render_samples_per_ray = render_samples_per_ray
         # serving clock starts at the first quantum, not construction, so
         # dataset/scene setup between submit and run is not billed as
         # service time in scenes_per_sec
@@ -70,9 +95,20 @@ class ReconstructionService:
         )
         self.sessions[sid] = sess
         self.scheduler.add(sess)
+        # redistribution leans on the session's occupancy bitfield; a
+        # trainer that never updates occupancy would be served all-occupied
+        # forever — a permanent uniform-S' preview, not a <=0.1 dB path —
+        # so occupancy-less sessions stay on the dense renderer
+        spr = None
+        if self.redistributed_render and trainer_cfg.use_occupancy:
+            s = trainer_cfg.render.n_samples
+            spr = (self.render_samples_per_ray
+                   if self.render_samples_per_ray is not None
+                   else min(s, max(4, s // 4)))
         self.renderer.register_session(
             sid, field_cfg, trainer_cfg.render,
             dataset.h, dataset.w, dataset.focal, trainer_cfg.eval_chunk,
+            occ_cfg=trainer_cfg.occ, samples_per_ray=spr,
         )
         return sid
 
@@ -82,19 +118,21 @@ class ReconstructionService:
     # ---- the serving loop ----
 
     def step(self) -> dict:
-        """One quantum: train one slice, publish, drain renders."""
+        """One quantum: train one cohort slice, publish each advanced
+        session, drain renders."""
         if self._started_at is None:
             self._started_at = time.perf_counter()
         sess = self.scheduler.step()
-        if sess is not None:
-            slices = len(sess.telemetry["step"])
+        for member in self.scheduler.last_trained:
+            slices = len(member.telemetry["step"])
             # a finished session may already be suspended (bounded residency)
             # — publish still works from its host tree
-            if sess.status == DONE or slices % self.snapshot_every == 0:
-                sess.publish(self.store)
+            if member.status == DONE or slices % self.snapshot_every == 0:
+                member.publish(self.store)
         results = self.renderer.drain()
         return {
             "trained": sess.session_id if sess is not None else None,
+            "cohort": [m.session_id for m in self.scheduler.last_trained],
             "step": sess.step if sess is not None else None,
             "results": results,
         }

@@ -28,9 +28,11 @@ from typing import Any
 
 import jax
 
+import numpy as np
+
 from ..checkpoint import CheckpointManager
 from ..core import field as field_lib
-from ..core.trainer import Instant3DTrainer, TrainerConfig, TrainState
+from ..core.trainer import Instant3DTrainer, TrainerConfig, TrainState, train_cohort
 from ..data import RaySampler
 
 PENDING = "pending"
@@ -105,13 +107,60 @@ class SceneSession:
         self.state, hist = self.trainer.train(
             self.state, self.sampler, iters=n, log_every=n
         )
-        self.train_wall_s += time.perf_counter() - t0
+        self._record_slice(hist, time.perf_counter() - t0)
+        return hist
+
+    def _record_slice(self, hist: dict, wall_s: float):
+        self.train_wall_s += wall_s
         self.telemetry["step"].append(self.step)
         self.telemetry["loss"].append(hist["loss"][-1])
         self.telemetry["live_fraction"].append(hist["live_fraction"][-1])
         if self.done:
             self.status = DONE
-        return hist
+
+    # ---- cohort training ----
+
+    def cohort_key(self) -> tuple:
+        """Sessions whose keys match can advance through one member-axis
+        compiled train step: identical field/trainer configs (the compiled
+        shapes and the shared-seed sample/ts streams) and the same absolute
+        step (the freeze schedule, occupancy cadence and stream keys are all
+        functions of it)."""
+        return (self.field_cfg, self.trainer_cfg, self.step)
+
+    @staticmethod
+    def run_cohort_slice(sessions: "list[SceneSession]", n_iters: int) -> int:
+        """Advance a cohort of sessions in lockstep by one shared time slice.
+
+        The slice length is clamped to the member with the least remaining
+        work, so every member advances by the same count and the cohort key
+        (which includes the step) stays aligned afterwards; a member that
+        reaches its target simply turns DONE and drops out of the next
+        quantum's cohort.  States round-trip through `train_cohort`'s
+        stack/unstack, which is bit-identical to each member running
+        `run_slice` alone.  Wall time is attributed evenly across members
+        (one device advanced them together).  Returns the iteration count
+        trained."""
+        assert len({s.cohort_key() for s in sessions}) == 1, "cohort key mismatch"
+        assert all(s.status == ACTIVE for s in sessions)
+        n = min(int(n_iters), min(s.target_iters - s.step for s in sessions))
+        if n <= 0:
+            for s in sessions:
+                if s.done:
+                    s.status = DONE
+            return 0
+        t0 = time.perf_counter()
+        states, hists = train_cohort(
+            [s.trainer for s in sessions],
+            [s.state for s in sessions],
+            [s.sampler for s in sessions],
+            iters=n, log_every=n,
+        )
+        dt = (time.perf_counter() - t0) / len(sessions)
+        for s, st, hist in zip(sessions, states, hists):
+            s.state = st
+            s._record_slice(hist, dt)
+        return n
 
     # ---- suspend / resume ----
 
@@ -151,13 +200,26 @@ class SceneSession:
             return self._host_tree["params"]
         raise RuntimeError(f"{self.session_id}: no trained state yet")
 
+    def _current_occ(self) -> tuple:
+        """(density EMA, fold count) matching `_current_params` — published
+        alongside params so the redistributed render path can rebuild the
+        session's occupancy bitfield from the snapshot alone."""
+        if self.state is not None:
+            occ = self.state.occ_state
+            return np.asarray(occ.density_ema), int(occ.step)
+        if self._host_tree is not None:
+            return (np.asarray(self._host_tree["occ_ema"]),
+                    int(self._host_tree["occ_step"]))
+        raise RuntimeError(f"{self.session_id}: no trained state yet")
+
     def publish(self, store) -> "Any":
-        """Publish current params to a SnapshotStore (atomic swap)."""
+        """Publish current params + occupancy to a SnapshotStore (atomic swap)."""
         meta = {
             "loss": float(self.telemetry["loss"][-1]) if self.telemetry["loss"] else None,
             "train_wall_s": self.train_wall_s,
         }
-        return store.publish(self.session_id, self._current_params(), self.step, meta)
+        return store.publish(self.session_id, self._current_params(), self.step,
+                             meta, occ=self._current_occ())
 
     def evaluate(self, views=None) -> dict:
         """PSNR of the *current* params against this session's ground truth."""

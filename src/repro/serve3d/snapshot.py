@@ -18,6 +18,7 @@ import threading
 from typing import Any, NamedTuple
 
 import jax
+import numpy as np
 
 from ..checkpoint import CheckpointManager
 
@@ -28,6 +29,11 @@ class Snapshot(NamedTuple):
     step: int           # training step the params were taken at
     params: Any         # host-side (numpy) param pytree — immutable by contract
     meta: dict
+    # (density EMA (R^3,), fold count) at the published step, or None for a
+    # params-only publisher.  The redistributed render path rebuilds the
+    # session's occupancy bitfield from this, so serving needs no live
+    # trainer state — same immutability contract as params.
+    occ: Any = None
 
 
 class SnapshotStore:
@@ -38,9 +44,14 @@ class SnapshotStore:
         self.keep_last = keep_last
         self._ckpts: dict[str, CheckpointManager] = {}
 
-    def publish(self, session_id: str, params, step: int, meta: dict | None = None) -> Snapshot:
-        """Copy params to host and atomically make them the session's latest."""
+    def publish(self, session_id: str, params, step: int, meta: dict | None = None,
+                occ=None) -> Snapshot:
+        """Copy params (+ occupancy) to host and atomically make them the
+        session's latest."""
         host = jax.device_get(params)
+        host_occ = None if occ is None else (
+            jax.device_get(occ[0]), int(occ[1])
+        )
         with self._lock:
             prev = self._latest.get(session_id)
             snap = Snapshot(
@@ -49,6 +60,7 @@ class SnapshotStore:
                 step=int(step),
                 params=host,
                 meta=dict(meta or {}),
+                occ=host_occ,
             )
             self._latest[session_id] = snap
         if self.persist_dir is not None:
@@ -57,7 +69,11 @@ class SnapshotStore:
                 ckpt = self._ckpts[session_id] = CheckpointManager(
                     f"{self.persist_dir}/{session_id}", keep_last=self.keep_last
                 )
-            ckpt.save(snap.step, {"params": host},
+            tree = {"params": host}
+            if host_occ is not None:
+                tree["occ_ema"] = host_occ[0]
+                tree["occ_step"] = np.asarray(host_occ[1], np.int32)
+            ckpt.save(snap.step, tree,
                       extra={"version": snap.version, **snap.meta})
         return snap
 

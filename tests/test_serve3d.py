@@ -202,8 +202,10 @@ def test_snapshot_store_persistence_roundtrip(datasets, tmp_path):
 
 
 def test_batched_render_matches_render_image(datasets):
-    """Coalesced cross-session renders == each session's own render_image."""
-    svc = ReconstructionService(slice_iters=4)
+    """Coalesced cross-session renders == each session's own render_image
+    (on the dense serving path; the redistributed default is covered by
+    tests/test_serve3d_cohort.py)."""
+    svc = ReconstructionService(slice_iters=4, redistributed_render=False)
     sids = [svc.submit_scene(ds, FIELD_CFG, TRAIN_CFG, target_iters=8, seed=i)
             for i, ds in enumerate(datasets)]
     svc.run()

@@ -1,0 +1,284 @@
+"""Cohort stacking: member-axis train steps vs sequential, scheduling, serving.
+
+The contract under test is the PR's tentpole: stacking sessions into a train
+cohort (one compiled member-axis step per iteration) must be a pure
+throughput change — params, optimizer moments and occupancy EMA stay
+bit-identical to sequential time-slicing, across cohort sizes, member
+orders, budget splits, and suspend/resume boundaries.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    Field, FieldConfig, Instant3DTrainer, TrainerConfig, occupancy, train_cohort,
+)
+from repro.core.rendering import RenderConfig
+from repro.data import build_dataset, RaySampler
+from repro.serve3d import ReconstructionService, RenderService, SceneSession
+
+RCFG = RenderConfig(n_samples=8)
+FIELD_CFG = FieldConfig(n_levels=2, max_resolution=32, log2_table_density=10,
+                        log2_table_color=8, hidden=16)
+OCFG = occupancy.OccupancyConfig(resolution=16, update_interval=4, warmup_steps=2)
+# min_budget below n_rays * n_samples so compaction budgets actually engage
+TRAIN_CFG = TrainerConfig(n_rays=64, render=RCFG, occ=OCFG, eval_chunk=144,
+                          min_budget=64)
+M = 3
+
+
+@pytest.fixture(scope="module")
+def datasets():
+    out = []
+    for seed in range(M):
+        _scene, ds = build_dataset(seed=seed, n_views=2, h=12, w=12,
+                                   cfg=RCFG, gt_samples=24)
+        out.append(ds)
+    return out
+
+
+def _fresh(datasets, k, cfg=TRAIN_CFG):
+    tr = Instant3DTrainer(Field(FIELD_CFG), cfg)
+    return tr, tr.init(jax.random.PRNGKey(k)), RaySampler(datasets[k])
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+def _state_equal(a, b):
+    return (_leaves_equal(a.params, b.params)
+            and _leaves_equal(a.opt_state, b.opt_state)
+            and np.array_equal(np.asarray(a.occ_state.density_ema),
+                               np.asarray(b.occ_state.density_ema))
+            and int(a.occ_state.step) == int(b.occ_state.step))
+
+
+# ---- core: cohort == sequential, bit for bit ----
+
+
+def test_cohort_matches_sequential_bit_identical(datasets):
+    """One member-axis step over M stacked sessions == M sequential train()
+    runs: params, optimizer moments AND occupancy EMA, plus the trainers'
+    budget bookkeeping (live fraction, overflow window)."""
+    seq = [_fresh(datasets, k) for k in range(M)]
+    seq_states, seq_hists = [], []
+    for tr, st, sa in seq:
+        st, hist = tr.train(st, sa, iters=16, log_every=16)
+        seq_states.append(st)
+        seq_hists.append(hist)
+
+    trs, sts, sas = zip(*[_fresh(datasets, k) for k in range(M)])
+    coh_states, hists = train_cohort(list(trs), list(sts), list(sas),
+                                     iters=16, log_every=16)
+    for k in range(M):
+        assert _state_equal(seq_states[k], coh_states[k]), f"member {k}"
+        assert trs[k]._live_frac == seq[k][0]._live_frac
+        assert ([int(v) for v in trs[k]._overflow_window]
+                == [int(v) for v in seq[k][0]._overflow_window])
+        assert hists[k]["loss"] == seq_hists[k]["loss"]
+        assert hists[k]["live_fraction"] == seq_hists[k]["live_fraction"]
+        assert hists[k]["overflow_total"] == seq_hists[k]["overflow_total"]
+
+
+def test_cohort_m_and_order_invariance(datasets):
+    """A member's stream does not depend on cohort size or its slot: the
+    scan-batched member axis is trip-count- and order-invariant (this is the
+    property that makes lax.map the right batching choice over vmap, which
+    reassociates CPU reductions)."""
+    def run(members):
+        trs, sts, sas = zip(*[_fresh(datasets, k) for k in members])
+        states, _ = train_cohort(list(trs), list(sts), list(sas),
+                                 iters=12, log_every=12)
+        return dict(zip(members, states))
+
+    solo = run([1])
+    pair = run([0, 1])
+    rev = run([1, 0])
+    trio = run([0, 1, 2])
+    for out in (pair, rev, trio):
+        assert _state_equal(solo[1], out[1])
+
+
+def test_budget_split_cohort_stays_bit_identical(datasets):
+    """Members whose measured live fractions diverge split into sub-cohorts
+    with different compiled budgets mid-run — still bit-identical to
+    sequential, including the interleaved membership ([0,2] vs [1])."""
+    forced = [0.05, 0.3, 0.05]
+
+    seq_states = []
+    for k in range(M):
+        tr, st, sa = _fresh(datasets, k)
+        st, _ = tr.train(st, sa, iters=12, log_every=12)
+        tr._live_frac = forced[k]
+        st, _ = tr.train(st, sa, iters=8, log_every=8)
+        seq_states.append(st)
+
+    trs, sts, sas = zip(*[_fresh(datasets, k) for k in range(M)])
+    mids, _ = train_cohort(list(trs), list(sts), list(sas), iters=12, log_every=12)
+    for k in range(M):
+        trs[k]._live_frac = forced[k]
+    budgets = {trs[k]._current_budget(True) for k in range(M)}
+    assert len(budgets) > 1, "forced live fractions must split the partition"
+    news, _ = train_cohort(list(trs), list(mids), list(sas), iters=8, log_every=8)
+    for k in range(M):
+        assert _state_equal(seq_states[k], news[k]), f"member {k}"
+
+
+def test_cohort_rejects_mismatched_members(datasets):
+    tr0, st0, sa0 = _fresh(datasets, 0)
+    other_cfg = TrainerConfig(n_rays=32, render=RCFG, occ=OCFG, eval_chunk=144)
+    tr1, st1, sa1 = _fresh(datasets, 1, cfg=other_cfg)
+    with pytest.raises(ValueError, match="configs"):
+        train_cohort([tr0, tr1], [st0, st1], [sa0, sa1], iters=4)
+    tr2, st2, sa2 = _fresh(datasets, 1)
+    st2b, _ = tr2.train(st2, sa2, iters=4, log_every=4)
+    with pytest.raises(ValueError, match="same training step"):
+        train_cohort([tr0, tr2], [st0, st2b], [sa0, sa2], iters=4)
+
+
+# ---- scheduling: mixed configs, fairness, suspend/resume ----
+
+
+def test_service_mixed_config_scheduling(datasets):
+    """Cohort + singleton sessions interleave in one service: the two
+    config-matched scenes ride one cohort, the odd-config scene trains
+    solo, and everyone still matches its sequential reference exactly."""
+    other_cfg = TrainerConfig(n_rays=32, render=RCFG, occ=OCFG, eval_chunk=144)
+    svc = ReconstructionService(slice_iters=4)
+    svc.submit_scene(datasets[0], FIELD_CFG, TRAIN_CFG, target_iters=12, seed=0,
+                     session_id="a0")
+    svc.submit_scene(datasets[1], FIELD_CFG, TRAIN_CFG, target_iters=12, seed=1,
+                     session_id="a1")
+    svc.submit_scene(datasets[2], FIELD_CFG, other_cfg, target_iters=12, seed=2,
+                     session_id="solo")
+    cohort_sizes = {}
+
+    first = svc.step()
+    cohort_sizes[first["trained"]] = len(first["cohort"])
+    assert sorted(first["cohort"]) == ["a0", "a1"]  # config-matched pair
+    svc.run()
+
+    for sid, seed, cfg in (("a0", 0, TRAIN_CFG), ("a1", 1, TRAIN_CFG),
+                           ("solo", 2, other_cfg)):
+        tr = Instant3DTrainer(Field(FIELD_CFG), cfg)
+        st = tr.init(jax.random.PRNGKey(seed))
+        st, _ = tr.train(st, RaySampler(datasets[seed]), iters=12, log_every=12)
+        sess = svc.sessions[sid]
+        assert sess.step == 12
+        assert _leaves_equal(st.params, sess._current_params()), sid
+
+
+def test_rr_fairness_with_cohorts(datasets):
+    """Slice credits: a session advanced inside someone else's cohort gives
+    up its own next turn, so cohort pairs don't starve singleton sessions —
+    every session finishes the same iteration count."""
+    other_cfg = TrainerConfig(n_rays=32, render=RCFG, occ=OCFG, eval_chunk=144)
+    svc = ReconstructionService(slice_iters=4)
+    svc.submit_scene(datasets[0], FIELD_CFG, TRAIN_CFG, target_iters=16, seed=0,
+                     session_id="a0")
+    svc.submit_scene(datasets[1], FIELD_CFG, TRAIN_CFG, target_iters=16, seed=1,
+                     session_id="a1")
+    svc.submit_scene(datasets[2], FIELD_CFG, other_cfg, target_iters=16, seed=2,
+                     session_id="solo")
+    trained_per_quantum = []
+
+    def hook(s, event):
+        trained_per_quantum.append(sorted(event["cohort"]))
+
+    svc.run(hook=hook)
+    assert all(s.step == 16 for s in svc.sessions.values())
+    # the pair advances together; solo gets a quantum in between (credits),
+    # so by completion both groups consumed the same number of quanta
+    pair_quanta = sum(1 for c in trained_per_quantum if c == ["a0", "a1"])
+    solo_quanta = sum(1 for c in trained_per_quantum if c == ["solo"])
+    assert pair_quanta == solo_quanta == 4
+
+
+def test_cohort_membership_survives_suspend_resume(datasets):
+    """Suspend every cohort member mid-run, resume, finish: the cohort
+    re-forms (same key: configs + lockstep step) and the final params are
+    bit-identical to an uninterrupted cohort run AND to sequential."""
+    def build():
+        svc = ReconstructionService(slice_iters=4)
+        for k in range(2):
+            svc.submit_scene(datasets[k], FIELD_CFG, TRAIN_CFG,
+                             target_iters=16, seed=k, session_id=f"s{k}")
+        return svc
+
+    plain = build()
+    plain.run()
+
+    svc = build()
+    ev = svc.step()
+    assert sorted(ev["cohort"]) == ["s0", "s1"]
+    for sess in svc.sessions.values():       # host round-trip mid-run
+        sess.suspend()
+        assert not sess.resident
+    ev = svc.step()                          # scheduler resumes + re-cohorts
+    assert sorted(ev["cohort"]) == ["s0", "s1"]
+    svc.run()
+
+    for sid in ("s0", "s1"):
+        a, b = plain.sessions[sid], svc.sessions[sid]
+        assert a.step == b.step == 16
+        assert _leaves_equal(a._current_params(), b._current_params()), sid
+
+
+# ---- serving: snapshots carry occupancy, redistributed render path ----
+
+
+def test_snapshot_carries_occ_and_redistributed_render(datasets):
+    """Published snapshots carry the occupancy EMA; the redistributed render
+    path serves from them within 0.1 dB of the dense render at a fraction
+    of the shaded points, and a dense-registered service is untouched."""
+    svc = ReconstructionService(slice_iters=4)  # redistributed by default
+    sid = svc.submit_scene(datasets[0], FIELD_CFG, TRAIN_CFG,
+                           target_iters=16, seed=0)
+    svc.run()
+    snap = svc.store.latest(sid)
+    assert snap.occ is not None
+    ema, folds = snap.occ
+    assert ema.shape == (OCFG.resolution ** 3,) and folds > 0
+
+    ds = datasets[0]
+    svc.request_render(sid, ds.poses[1])
+    redist = svc.renderer.drain()[0]
+
+    dense_rs = RenderService(svc.store)
+    dense_rs.register_session(sid, FIELD_CFG, RCFG, ds.h, ds.w, ds.focal,
+                              eval_chunk=144)
+    dense_rs.submit(sid, ds.poses[1])
+    dense = dense_rs.drain()[0]
+
+    from repro.core import losses
+    gt = ds.images[1]
+    p_redist = float(losses.psnr(jnp.asarray(redist.rgb), jnp.asarray(gt)))
+    p_dense = float(losses.psnr(jnp.asarray(dense.rgb), jnp.asarray(gt)))
+    assert abs(p_dense - p_redist) <= 0.1, (p_dense, p_redist)
+    # and the dense fallback really rendered the dense path
+    assert not np.array_equal(redist.rgb, dense.rgb)
+
+
+def test_redistributed_render_requires_occ_cfg(datasets):
+    rs = RenderService(ReconstructionService().store)
+    with pytest.raises(ValueError, match="occ_cfg"):
+        rs.register_session("x", FIELD_CFG, RCFG, 12, 12, 30.0,
+                            samples_per_ray=2)
+
+
+def test_occupancy_less_session_serves_dense(datasets):
+    """A trainer with use_occupancy=False publishes an all-zero EMA forever;
+    redistributed serving would degrade every view to a uniform S' preview,
+    so the service must register such sessions on the dense path."""
+    no_occ = TrainerConfig(n_rays=64, render=RCFG, occ=OCFG, eval_chunk=144,
+                           use_occupancy=False)
+    svc = ReconstructionService(slice_iters=4)  # redistributed default on
+    sid = svc.submit_scene(datasets[0], FIELD_CFG, no_occ, target_iters=4)
+    assert svc.renderer._geom[sid].samples_per_ray is None
+    occ_sid = svc.submit_scene(datasets[1], FIELD_CFG, TRAIN_CFG, target_iters=4)
+    assert svc.renderer._geom[occ_sid].samples_per_ray == 4

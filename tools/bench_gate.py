@@ -1,0 +1,206 @@
+#!/usr/bin/env python
+"""Perf-trajectory gate: diff fresh BENCH_*.json artifacts against the
+committed baseline and fail CI on regressions.
+
+Replaces the per-step inline `python -c` assertion blobs that used to live
+in ci.yml with one declarative rule table.  Two kinds of checks run per
+gated key:
+
+* **absolute** — the fresh value must satisfy the rule's hard bound
+  (`max=` / `min=` / `flag=True`), independent of any baseline.  These are
+  the invariants a PR must never break (bit-identity flags, parity caps,
+  fused-path time ratio <= 1).
+* **trajectory** — the fresh value must not regress against the *committed*
+  artifact (`git show <ref>:<artifact>`) beyond `rel_tol`/`abs_tol`.  The
+  committed artifacts are the repo's perf history; the gate keeps the
+  trajectory monotone-ish instead of letting slow drift hide inside a loose
+  absolute bound.  Trajectory checks are skipped (with a note) when the
+  fresh and baseline runs used different scales (`config.smoke` mismatch) —
+  a smoke run regressing against a committed full run is noise, not signal.
+
+Exit status is non-zero if any rule fails; every gated key prints one
+report line either way.
+
+    python tools/bench_gate.py                 # gate all known artifacts
+    python tools/bench_gate.py BENCH_serve3d.json
+    python tools/bench_gate.py --baseline-ref HEAD~1
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+@dataclass(frozen=True)
+class Rule:
+    path: str                     # dotted key path into the artifact json
+    # absolute bounds (always enforced on the fresh value)
+    max: float | None = None
+    min: float | None = None
+    flag: bool = False            # fresh value must be truthy
+    full_only: bool = False       # absolute bound applies only to full runs
+    # trajectory tolerances vs the committed baseline (direction inferred:
+    # keys with `max` must not grow, keys with `min` must not shrink)
+    rel_tol: float | None = None
+    abs_tol: float | None = None
+
+
+# Rule table: what each benchmark artifact promises.
+SPECS: dict[str, list[Rule]] = {
+    "BENCH_pipeline.json": [
+        # compaction must keep querying fewer points than dense at parity
+        Rule("points_ratio", max=1.0, rel_tol=0.15),
+        Rule("psnr_rgb_delta", min=-0.1, abs_tol=0.1),
+    ],
+    "BENCH_fused_path.json": [
+        Rule("time_ratio", max=1.0, rel_tol=0.10),
+        Rule("params_bit_identical", flag=True),
+    ],
+    "BENCH_sampler.json": [
+        Rule("off_bit_identical", flag=True),
+        # +0.3 dB at equal points is the full-run promise; smoke runs only
+        # trajectory-compare against a smoke baseline
+        Rule("psnr_rgb_delta_equal_points", min=0.3, full_only=True, abs_tol=0.5),
+    ],
+    "BENCH_serve3d.json": [
+        Rule("parity.max_abs_diff_db", max=0.1),
+        Rule("cohort.bit_identical", flag=True),
+        # scene-parallel training must beat pure time-slicing
+        Rule("cohort.speedup_4v1", min=1.0, abs_tol=0.15),
+        # redistributed serving must not cost latency or PSNR
+        Rule("render_path.p50_ratio", max=1.0, rel_tol=0.20),
+        Rule("render_path.psnr_cost_db", max=0.1, abs_tol=0.1),
+    ],
+}
+
+
+def lookup(doc: dict, dotted: str):
+    cur = doc
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def committed(artifact: str, ref: str) -> dict | None:
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"{ref}:{artifact}"],
+            cwd=REPO, capture_output=True, check=True,
+        ).stdout
+        return json.loads(blob)
+    except (subprocess.CalledProcessError, json.JSONDecodeError):
+        return None
+
+
+def is_smoke(doc: dict | None) -> bool | None:
+    """Artifacts mark their scale either at the top level ("smoke") or in a
+    "config" block; None means the artifact predates the marker."""
+    if doc is None:
+        return None
+    if "smoke" in doc:
+        return doc["smoke"]
+    cfg = doc.get("config")
+    return cfg.get("smoke") if isinstance(cfg, dict) else None
+
+
+def gate_artifact(artifact: str, ref: str) -> list[str]:
+    """Returns failure messages (empty == pass); prints per-key report."""
+    fresh_path = REPO / artifact
+    if not fresh_path.exists():
+        print(f"[FAIL] {artifact}: missing (benchmark did not produce it)")
+        return [f"{artifact}: missing"]
+    fresh = json.loads(fresh_path.read_text())
+    base = committed(artifact, ref)
+    # trajectory comparisons need equal scale: the smoke marker must match,
+    # and an unmarked legacy baseline (None) never matches a marked fresh run
+    comparable = (base is not None and is_smoke(fresh) == is_smoke(base)
+                  and is_smoke(fresh) is not None)
+    failures = []
+
+    for rule in SPECS[artifact]:
+        val = lookup(fresh, rule.path)
+        bval = lookup(base, rule.path) if base is not None else None
+        label = f"{artifact}:{rule.path}"
+        problems = []
+        notes = []
+
+        if val is None:
+            failures.append(f"{label}: key missing from fresh artifact")
+            print(f"[FAIL] {label}: key missing")
+            continue
+
+        if rule.flag:
+            if not val:
+                problems.append("flag is false")
+        else:
+            full_run = is_smoke(fresh) is False
+            enforce_abs = not rule.full_only or full_run
+            if rule.max is not None and enforce_abs and val > rule.max:
+                problems.append(f"{val:.4f} > max {rule.max}")
+            if rule.min is not None and enforce_abs and val < rule.min:
+                problems.append(f"{val:.4f} < min {rule.min}")
+            if not enforce_abs:
+                notes.append("absolute bound is full-run only")
+            # trajectory vs committed baseline
+            if comparable and isinstance(bval, (int, float)) and not isinstance(bval, bool):
+                slack = 0.0
+                if rule.rel_tol is not None:
+                    slack = max(slack, abs(bval) * rule.rel_tol)
+                if rule.abs_tol is not None:
+                    slack = max(slack, rule.abs_tol)
+                if rule.rel_tol is not None or rule.abs_tol is not None:
+                    if rule.max is not None and val > bval + slack:
+                        problems.append(
+                            f"{val:.4f} regressed past baseline {bval:.4f} (+{slack:.4f} tol)")
+                    if rule.min is not None and val < bval - slack:
+                        problems.append(
+                            f"{val:.4f} regressed below baseline {bval:.4f} (-{slack:.4f} tol)")
+            elif base is None:
+                notes.append("no committed baseline (new artifact)")
+            elif not comparable:
+                notes.append("baseline scale differs (smoke vs full) — trajectory skipped")
+
+        shown = val if rule.flag else (f"{val:.4f}" if isinstance(val, float) else val)
+        base_s = "" if bval is None else f" baseline={bval if rule.flag else round(float(bval), 4)}"
+        note_s = f"  ({'; '.join(notes)})" if notes else ""
+        if problems:
+            print(f"[FAIL] {label}: {'; '.join(problems)} (fresh={shown}{base_s})")
+            failures += [f"{label}: {p}" for p in problems]
+        else:
+            print(f"[ok]   {label}: {shown}{base_s}{note_s}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("artifacts", nargs="*", default=None,
+                    help="artifact filenames to gate (default: all known)")
+    ap.add_argument("--baseline-ref", default="HEAD",
+                    help="git ref holding the committed baseline artifacts")
+    args = ap.parse_args(argv)
+
+    names = args.artifacts or sorted(SPECS)
+    unknown = [n for n in names if n not in SPECS]
+    if unknown:
+        print(f"no gate rules for: {', '.join(unknown)}", file=sys.stderr)
+        return 2
+    failures = []
+    for name in names:
+        failures += gate_artifact(name, args.baseline_ref)
+    if failures:
+        print(f"\nbench gate FAILED ({len(failures)} violation(s))")
+        return 1
+    print(f"\nbench gate passed ({len(names)} artifact(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
