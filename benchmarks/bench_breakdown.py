@@ -13,6 +13,7 @@ from repro.core import Field
 from repro.core.rendering import sample_ts
 from repro.core import encoding
 from repro.data import RaySampler
+from repro.kernels.fused_step import ref as fs_ref
 
 
 def run():
@@ -41,12 +42,38 @@ def run():
         return jnp.mean(sigma) + jnp.mean(rgb)
     us["full_fwd_bwd"] = common.timeit(jax.jit(jax.grad(full_loss)), params, iters=5)
 
+    # the two fused routes over the same batch: PR 3 (fused encode, split
+    # MLPs) and PR 6 (whole encode->MLP chain in one custom-VJP op)
+    def fused_loss(p):
+        sigma, rgb = field.query_fused(p, pts, dirs)
+        return jnp.mean(sigma) + jnp.mean(rgb)
+    us["fused_path_fwd_bwd"] = common.timeit(jax.jit(jax.grad(fused_loss)), params, iters=5)
+
+    def step_loss(p):
+        sigma, rgb = field.query_step(p, pts, dirs)
+        return jnp.mean(sigma) + jnp.mean(rgb)
+    us["fused_step_fwd_bwd"] = common.timeit(jax.jit(jax.grad(step_loss)), params, iters=5)
+
     grid_us = us["encode_fwd"] + us["encode_bwd"]
     frac = grid_us / us["full_fwd_bwd"]
     for k, v in us.items():
         common.emit(f"fig4_breakdown[{k}]", v, "")
     common.emit("fig4_breakdown[grid_interp_fraction]", grid_us,
                 f"fraction_of_step={frac:.1%};paper_claims=~80%")
+
+    # residual bytes/step held live between forward and backward of the
+    # one-kernel step, per policy — static accounting at this batch size
+    cfg = common.BASE_FIELD
+    sizes = (field.density_enc.cfg.table_size, field.color_enc.cfg.table_size)
+    counts = field.param_counts(params)
+    rb = {pol: fs_ref.residual_bytes(
+        pol, pts.shape[0], cfg.n_levels, cfg.n_features, sizes,
+        field.sh_dim, counts["density_mlp"], counts["color_mlp"])
+        for pol in ("stash", "recompute")}
+    common.emit("fig4_breakdown[fused_step_residual_bytes]", 0.0,
+                f"n_points={pts.shape[0]};stash={rb['stash']};"
+                f"recompute={rb['recompute']};"
+                f"ratio={rb['recompute'] / rb['stash']:.3f}")
     return us
 
 

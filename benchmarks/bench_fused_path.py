@@ -1,9 +1,11 @@
-"""Fused compacted-path training kernel vs the PR 1 compacted baseline.
+"""Fused training-step kernels vs the PR 1 compacted baseline.
 
-Trains the same scene twice — `fused_path=False` (PR 1: per-grid encode +
-merged backward with its own argsort) and `fused_path=True` (one encode pass
-over all grids on the Morton-ordered budget batch, pre-sorted BUM backward)
-— and emits `BENCH_fused_path.json` with:
+Trains the same scene three times — `fused_path=False` (PR 1: per-grid
+encode + merged backward with its own argsort), `fused_path=True` (PR 3:
+one encode pass over all grids on the Morton-ordered budget batch,
+pre-sorted BUM backward), and `fused_step=True` (PR 6: the whole
+encode->MLP chain inside ONE differentiable op with the recompute residual
+policy) — and emits `BENCH_fused_path.json` with:
 
 * `unique_corner_reads`: FMU accounting at steady-state occupancy — the
   fraction of corner reads hitting distinct addresses per kernel block (and
@@ -17,6 +19,12 @@ over all grids on the Morton-ordered budget batch, pre-sorted BUM backward)
 * `params_bit_identical` + `psnr_rgb_delta`: the fused path is the same
   math, so after identical training runs the parameters must match bit for
   bit and the PSNR delta must be exactly 0.0.
+* `fused_step`: the same three report legs for the one-kernel step —
+  paired time ratios vs the compacted baseline (schedule-weighted and
+  full-step-only, the latter gated against the committed PR 3 fused-path
+  trajectory), bit-identity of a full training run against the PR 3 fused
+  variant, and the static residual-bytes accounting for both residual
+  policies at the steady-state budget (the recompute-vs-stash memory win).
 """
 from __future__ import annotations
 
@@ -34,15 +42,19 @@ from repro.core import Field, Instant3DTrainer, occupancy
 from repro.core.rendering import sample_ts
 from repro.data import RaySampler
 from repro.kernels.fused_path import ref as fp_ref
+from repro.kernels.fused_step import ref as fs_ref
 
 from .common import BASE_FIELD, BASE_TRAIN, dataset, emit
 
 OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_fused_path.json"
 
 
-def _train_variant(fused: bool, iters: int):
+def _train_variant(fused: bool, iters: int, fused_step: bool = False):
     scene, ds = dataset()
-    tr = Instant3DTrainer(Field(BASE_FIELD), replace(BASE_TRAIN, fused_path=fused))
+    tr = Instant3DTrainer(
+        Field(BASE_FIELD),
+        replace(BASE_TRAIN, fused_path=fused, fused_step=fused_step),
+    )
     state = tr.init(jax.random.PRNGKey(0))
     sampler = RaySampler(ds)
     state, hist = tr.train(state, sampler, iters=iters, log_every=max(iters // 4, 1))
@@ -127,6 +139,7 @@ def run(smoke: bool = False) -> None:
 
     tr_f, st_f, sam_f, ds, hist_f = _train_variant(True, iters)
     tr_u, st_u, sam_u, _, hist_u = _train_variant(False, iters)
+    tr_s, st_s, sam_s, _, hist_s = _train_variant(True, iters, fused_step=True)
 
     # Time the two jitted step flavors the F_D:F_C = 1:0.5 schedule runs
     # (full step, freeze_color step) on a fixed steady-state batch.
@@ -137,32 +150,58 @@ def run(smoke: bool = False) -> None:
     batch = sam_f.sample(kb, BASE_TRAIN.n_rays)
     ts = sample_ts(kt, BASE_TRAIN.n_rays, BASE_TRAIN.render)
     best = {}
-    rep_ratios = []
-    fused_leg = ("fused", tr_f, st_f)
-    comp_leg = ("compacted", tr_u, st_u)
+    rep_ratios, step_ratios, step_full_ratios = [], [], []
+    legs = {
+        "fused_step": (tr_s, st_s),
+        "fused": (tr_f, st_f),
+        "compacted": (tr_u, st_u),
+    }
     for _ in range(reps):
         totals = {}
-        # ABBA within a rep: linear machine drift across the rep hits both
-        # variants equally and cancels out of the paired ratio
-        for name, tr, st in (fused_leg, comp_leg, comp_leg, fused_leg):
+        rep_ms = {}
+        # palindromic order within a rep: linear machine drift across the
+        # rep hits every variant equally and cancels out of the paired ratios
+        for name in ("fused_step", "fused", "compacted",
+                     "compacted", "fused", "fused_step"):
+            tr, st = legs[name]
             for fc in (False, True):
                 ms = _time_step(tr, st, batch, ts, budget, fc, timed_iters)
                 key = (name, fc)
                 best[key] = min(best.get(key, np.inf), ms)
+                rep_ms[key] = min(rep_ms.get(key, np.inf), ms)
                 totals[name] = totals.get(name, 0.0) + ms
         rep_ratios.append(totals["fused"] / totals["compacted"])
+        step_ratios.append(totals["fused_step"] / totals["compacted"])
+        step_full_ratios.append(
+            rep_ms[("fused_step", False)] / rep_ms[("compacted", False)])
     # schedule-weighted us/step: half the iterations freeze the color branch
     us_fused = (best[("fused", False)] + best[("fused", True)]) / 2 * 1e3
     us_compacted = (best[("compacted", False)] + best[("compacted", True)]) / 2 * 1e3
+    us_step = (best[("fused_step", False)] + best[("fused_step", True)]) / 2 * 1e3
     time_ratio = float(np.median(rep_ratios))
 
     # identical-math check: same seeds, same stream -> params must match bits
     leaves_f = jax.tree_util.tree_leaves(st_f.params)
     leaves_u = jax.tree_util.tree_leaves(st_u.params)
+    leaves_s = jax.tree_util.tree_leaves(st_s.params)
     bit_identical = all(bool(np.array_equal(np.asarray(a), np.asarray(b)))
                         for a, b in zip(leaves_f, leaves_u))
+    step_bit_identical = all(bool(np.array_equal(np.asarray(a), np.asarray(b)))
+                             for a, b in zip(leaves_s, leaves_f))
     ev_f = tr_f.evaluate(st_f.params, ds, views=[0, 1])
     ev_u = tr_u.evaluate(st_u.params, ds, views=[0, 1])
+    ev_s = tr_s.evaluate(st_s.params, ds, views=[0, 1])
+
+    # residual footprint at the steady-state budget: static accounting from
+    # the oracle (nothing allocated), both policies of the one-kernel step
+    sizes = (tr_s.field.density_enc.cfg.table_size,
+             tr_s.field.color_enc.cfg.table_size)
+    counts = tr_s.field.param_counts(st_s.params)
+    rb = {pol: fs_ref.residual_bytes(
+        pol, int(budget or BASE_TRAIN.n_rays), BASE_FIELD.n_levels,
+        BASE_FIELD.n_features, sizes, tr_s.field.sh_dim,
+        counts["density_mlp"], counts["color_mlp"])
+        for pol in ("stash", "recompute")}
 
     dedup = _dedup_stats(tr_f, st_f, sam_f)
 
@@ -186,12 +225,38 @@ def run(smoke: bool = False) -> None:
         "time_ratio_best": us_fused / us_compacted,
         "params_bit_identical": bit_identical,
         "psnr_rgb_delta": ev_f["psnr_rgb"] - ev_u["psnr_rgb"],
+        "fused_step": {
+            "us_per_step": us_step,
+            "us_full_step": best[("fused_step", False)] * 1e3,
+            "us_freeze_color_step": best[("fused_step", True)] * 1e3,
+            "psnr_rgb": ev_s["psnr_rgb"],
+            "overflow_total": hist_s["overflow_total"],
+            "time_ratio": float(np.median(step_ratios)),
+            "time_ratio_per_rep": [round(r, 4) for r in step_ratios],
+            "time_ratio_full_step": float(np.median(step_full_ratios)),
+            "params_bit_identical": step_bit_identical,
+            "psnr_rgb_delta": ev_s["psnr_rgb"] - ev_u["psnr_rgb"],
+            "residual_bytes": {
+                "n_points": int(budget or BASE_TRAIN.n_rays),
+                "stash": rb["stash"],
+                "recompute": rb["recompute"],
+                "ratio": rb["recompute"] / rb["stash"],
+            },
+        },
     }
     OUT_PATH.write_text(json.dumps(result, indent=2) + "\n")
 
     m, f = dedup["morton"], dedup["flat"]
     emit("fused_path[fused]", us_fused, f"psnr={ev_f['psnr_rgb']:.2f}")
     emit("fused_path[compacted_pr1]", us_compacted, f"psnr={ev_u['psnr_rgb']:.2f}")
+    emit("fused_path[fused_step]", us_step,
+         f"psnr={ev_s['psnr_rgb']:.2f};"
+         f"time_ratio={result['fused_step']['time_ratio']:.3f};"
+         f"full_step_ratio={result['fused_step']['time_ratio_full_step']:.3f};"
+         f"bit_identical={step_bit_identical}")
+    emit("fused_path[residual_bytes]", 0.0,
+         f"stash={rb['stash']};recompute={rb['recompute']};"
+         f"ratio={rb['recompute'] / rb['stash']:.3f} (policy=recompute default)")
     emit("fused_path[dedup]", 0.0,
          f"block_unique_morton={m['unique_ratio_block']:.3f};"
          f"block_unique_flat={f['unique_ratio_block']:.3f};"

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from . import encoding as enc
 from ..kernels.fused_mlp import ops as mlp_ops
 from ..kernels.fused_path import ops as fp_ops
+from ..kernels.fused_step import ops as fs_ops
 
 
 # --- truncated exp: density activation with clipped-gradient stability ---
@@ -57,6 +58,12 @@ class FieldConfig:
     # kernels (routing resolves through the repro.kernels backend registry)
     merged_backward: bool = True
     grid_dtype: str = "float32"
+    # what the fused ops keep live between forward and backward: "recompute"
+    # re-derives geometry/streams/features in the backward from the inputs
+    # (bit-identical gradients, no (L,N,8) residuals — the right default at
+    # production L=16/100k-point scale); "stash" is the PR 3 residual set
+    # (backward does zero geometry work, costs residual memory).
+    residual_policy: str = "recompute"
 
     def grid_cfg(self, branch: str) -> enc.HashGridConfig:
         log2_t = self.log2_table_density if branch == "density" else self.log2_table_color
@@ -96,7 +103,17 @@ class Field:
             tuple(sizes),
             cfg.n_features,
             merged_backward=cfg.merged_backward,
+            residual_policy=cfg.residual_policy,
         )
+        # one-kernel training step (encode -> MLP heads in a single op);
+        # decomposed fields only — the NGP baseline keeps the PR 3 route
+        self._fused_step = fs_ops.make_fused_step(
+            self.density_enc.resolutions,
+            tuple(sizes),
+            cfg.n_features,
+            merged_backward=cfg.merged_backward,
+            residual_policy=cfg.residual_policy,
+        ) if cfg.decomposed else None
 
     # ---- params ----
 
@@ -138,13 +155,15 @@ class Field:
         color-grid features, or None for the NGP baseline (color MLP then
         eats the density MLP's geo features)."""
         m = params["density_mlp"]
-        out = mlp_ops.mlp2(hd, m["w1"], m["b1"], m["w2"], m["b2"])
+        out = mlp_ops.mlp2(hd, m["w1"], m["b1"], m["w2"], m["b2"],
+                           residual_policy=self.cfg.residual_policy)
         sigma, geo = trunc_exp(out[..., 0]), out[..., 1:]
         sh = enc.sh_encoding(dirs, self.cfg.sh_degree)
         cin = jnp.concatenate([hc if hc is not None else geo, sh], axis=-1)
         m = params["color_mlp"]
         raw = mlp_ops.mlp3(
             cin, m["w1"], m["b1"], m["w2"], m["b2"], m["w3"], m["b3"],
+            residual_policy=self.cfg.residual_policy,
         )
         return sigma, jax.nn.sigmoid(raw)
 
@@ -176,6 +195,25 @@ class Field:
             (hd,) = self._fused_encode(points, params["density_grid"])
             hc = None
         return self._mlp_heads(params, hd, hc, dirs)
+
+    def query_step(self, params: dict, points: jnp.ndarray, dirs: jnp.ndarray):
+        """One-kernel query: encode(both grids) + both MLP heads in a single
+        differentiable op (`fused_step.make_fused_step`), with the residual
+        policy from the config deciding what crosses to the backward.
+        Bit-identical to `query_fused` on the ref backend — same primitives,
+        same order — and the custom VJP's table grads commit through the
+        stacked windowed form of `merged_scatter_add`.  Falls back to
+        `query_fused` for the NGP baseline (single grid: the color MLP eats
+        the density head's geo features, which only the split path wires)."""
+        if self._fused_step is None:
+            return self.query_fused(params, points, dirs)
+        sh = enc.sh_encoding(dirs, self.cfg.sh_degree)
+        out, raw = self._fused_step(
+            points, sh,
+            params["density_grid"], params["color_grid"],
+            params["density_mlp"], params["color_mlp"],
+        )
+        return trunc_exp(out[..., 0]), jax.nn.sigmoid(raw)
 
     # ---- bookkeeping ----
 

@@ -107,6 +107,13 @@ class RenderPipeline:
     fused query is bit-identical to the unfused one, so this knob changes
     where the work happens, never the numbers.
 
+    fused_step: with the fused path on, collapse the shade stage further into
+    the field's ONE-kernel step (`field.query_step`): encode + both MLP heads
+    in a single differentiable op with the residual policy from the field
+    config.  Bit-identical to the fused encode + separate MLPs on the ref
+    backend; fields without `query_step` (or non-decomposed ones) fall back
+    to `query_fused` inside the field, so the knob is always safe to leave on.
+
     redistribute: adaptive ray marching (stage 2b).  With a bitfield and a
     budget present, each ray's fixed S-sample budget is re-spent on its live
     occupancy segments: S' = budget // B samples per ray, placed by
@@ -121,10 +128,13 @@ class RenderPipeline:
     """
 
     def __init__(self, field, cfg: _r.RenderConfig, *, fused_path: bool = True,
-                 redistribute: bool = False):
+                 fused_step: bool = True, redistribute: bool = False):
         self.field = field
         self.cfg = cfg
         self.fused_path = fused_path and hasattr(field, "query_fused")
+        self.fused_step = (
+            self.fused_path and fused_step and hasattr(field, "query_step")
+        )
         self.redistribute_on = redistribute
 
     # ---- stage 1: sample generation ----
@@ -258,9 +268,14 @@ class RenderPipeline:
         fused=True routes through `field.query_fused` (one encode pass over
         all grids, pre-sorted BUM backward) — bit-identical to the per-grid
         query on the ref backend, so the flag is a placement choice, not a
-        numerics choice.  The stage is agnostic to how `unit` was sampled;
-        it sees only the compacted point set."""
+        numerics choice.  With the pipeline's `fused_step` knob also on, the
+        stage collapses further into `field.query_step`: encode AND both MLP
+        heads in one custom-VJP op (still bit-identical on ref).  The stage
+        is agnostic to how `unit` was sampled; it sees only the compacted
+        point set."""
         if fused:
+            if self.fused_step:
+                return self.field.query_step(params, unit, dirs)
             return self.field.query_fused(params, unit, dirs)
         return self.field.query(params, unit, dirs)
 

@@ -161,6 +161,13 @@ class TrainerConfig:
     # unfused compacted path on the ref backend; turn off to time/debug the
     # PR 1 per-grid shade.
     fused_path: bool = True
+    # one-kernel shade (default on, only meaningful with fused_path): the
+    # compacted shade runs encode + both MLP heads as ONE custom-VJP op
+    # (`field.query_step`) with the field config's residual policy deciding
+    # what survives to the backward.  Bit-identical to fused_path with
+    # separate MLP dispatches on the ref backend; turn off to time/debug the
+    # PR 3 encode-then-MLP split.
+    fused_step: bool = True
     # occupancy-guided sample redistribution (pipeline stage 2b): re-spend
     # each ray's freed sample budget on its live segments — S' = budget // B
     # samples per ray, inverse-CDF placed, per-sample quadrature deltas.
@@ -291,7 +298,7 @@ def cohort_step_fn(field_cfg, cfg: TrainerConfig, freeze_color: bool,
         field = field_lib.Field(field_cfg)
         pipeline = RenderPipeline(
             field, cfg.render, fused_path=cfg.fused_path,
-            redistribute=cfg.redistribute,
+            fused_step=cfg.fused_step, redistribute=cfg.redistribute,
         )
         raw = _make_raw_step(field, _make_opt(cfg), pipeline, cfg,
                              freeze_color, freeze_density, budget, use_bits)
@@ -337,7 +344,7 @@ class Instant3DTrainer:
         self.opt = _make_opt(cfg)
         self.pipeline = RenderPipeline(
             field, cfg.render, fused_path=cfg.fused_path,
-            redistribute=cfg.redistribute,
+            fused_step=cfg.fused_step, redistribute=cfg.redistribute,
         )
         self._step_fns = {}
         # host-side live-fraction estimate driving the compaction budget;

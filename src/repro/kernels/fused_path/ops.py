@@ -47,6 +47,7 @@ from ..hash_encode import ops as he_ops
 from ..grid_update import ops as gu_ops
 
 DEFAULT_BLOCK_POINTS = _kernel.DEFAULT_BLOCK_POINTS
+RESIDUAL_POLICIES = ("stash", "recompute")
 
 
 def make_fused_encode(
@@ -54,6 +55,7 @@ def make_fused_encode(
     table_sizes,
     n_features: int,
     *,
+    residual_policy: str = "recompute",
     backend=None,
     merged_backward: bool = True,
     block_points: int = DEFAULT_BLOCK_POINTS,
@@ -85,10 +87,17 @@ def make_fused_encode(
       zero output while reading row 0 of the table (a harmless in-bounds
       address), so padded lanes neither contribute features nor fault.
       Regression-tested in tests/test_hash_encode.py.
-    * **Residual footprint.** weights (L,N,8) plus two (L·N·8,) index
-      streams per grid stay live from forward to backward; see ROADMAP for
-      the recompute-in-backward policy on memory-bound devices.
+    * **Residual footprint.** Set by `residual_policy`.  "stash" is the
+      PR 3 set: weights (L,N,8) plus two (L·N·8,) index streams per grid
+      stay live from forward to backward and the VJP does no geometry work.
+      "recompute" (default) keeps only the points alias and re-derives
+      geometry + streams in the backward with the same deterministic ops —
+      BIT-identical gradients (stable argsort of an identical address stream
+      is an identical permutation), just traded from residual bandwidth to
+      backward FLOPs; the right default at production L=16/100k-point scale.
     """
+    if residual_policy not in RESIDUAL_POLICIES:
+        raise ValueError(f"residual_policy must be one of {RESIDUAL_POLICIES}")
     from .. import resolve_backend
     be = resolve_backend(backend)
     resolutions = tuple(int(r) for r in resolutions)
@@ -125,18 +134,34 @@ def make_fused_encode(
             for g in range(n_grids)
         )
 
-    @jax.custom_vjp
-    def encode(points, *tables):
-        return _forward(points, tables)
-
-    def encode_fwd(points, *tables):
-        # Shared geometry: one corner/weight pass serves every grid and, via
-        # the residuals, the whole backward.
+    def _plan(points):
+        """Shared geometry + backward plan: weights (L,N,8) and, per grid,
+        the stable argsort of the canonical corner-address stream — the
+        unfused backward's merge order."""
         corners, weights = ref.corner_geometry(points, resolutions)
         idx_by_grid = [
             ref.level_indices(corners, resolutions, table_sizes[g], dense_flags[g])
             for g in range(n_grids)
         ]
+        streams = []
+        for g in range(n_grids):
+            addr = ref.address_stream(idx_by_grid[g], table_sizes[g])
+            order = jnp.argsort(addr)
+            streams.append((addr[order], order))
+        return jnp.stack(weights), tuple(streams), idx_by_grid, weights
+
+    @jax.custom_vjp
+    def encode(points, *tables):
+        return _forward(points, tables)
+
+    def encode_fwd(points, *tables):
+        protos = tuple(jnp.zeros((0,), t.dtype) for t in tables)
+        if residual_policy == "recompute":
+            # Only the points alias crosses to the backward; the plan is
+            # re-derived there (bit-identical — same deterministic ops on the
+            # same inputs) and pure forwards never pay for it at all.
+            return _forward(points, tables), (points, None, None, protos)
+        w_stack, streams, idx_by_grid, weights = _plan(points)
         if be.use_pallas:
             outs = _forward(points, tables)
         else:
@@ -144,20 +169,12 @@ def make_fused_encode(
                 ref.encode_from_indices(tables[g], idx_by_grid[g], weights)
                 for g in range(n_grids)
             )
-        # Plan the backward now: the stable argsort of each grid's address
-        # stream IS the unfused backward's merge order — computing it here
-        # (over the Morton-quasi-sorted stream) lets the VJP skip it.
-        streams = []
-        for g in range(n_grids):
-            addr = ref.address_stream(idx_by_grid[g], table_sizes[g])
-            order = jnp.argsort(addr)
-            streams.append((addr[order], order))
-        w_stack = jnp.stack(weights)  # (L, N, 8)
-        protos = tuple(jnp.zeros((0,), t.dtype) for t in tables)
-        return outs, (points, w_stack, tuple(streams), protos)
+        return outs, (points, w_stack, streams, protos)
 
     def encode_bwd(res_pack, g_out):
         points, w_stack, streams, protos = res_pack
+        if streams is None:  # recompute policy
+            w_stack, streams, _, _ = _plan(points)
         n = points.shape[0]
         grads = []
         for g in range(n_grids):

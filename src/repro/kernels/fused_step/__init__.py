@@ -1,0 +1,3 @@
+"""One-kernel training step: fused encode -> MLP with a recompute-in-backward
+residual policy.  See ops.make_fused_step."""
+from . import ref, ops  # noqa: F401

@@ -1,0 +1,157 @@
+"""Pure-jnp oracle for the one-kernel training step (encode -> MLP heads).
+
+The fused compacted path (PR 3, `kernels/fused_path`) already shares corner
+geometry across grids and pre-sorts the backward update stream, but it still
+dispatches encode and the MLPs as separate ops and materializes the full
+residual set — weights (L,N,8) plus two (L*N*8,) index streams per grid —
+between forward and backward.  This module is the oracle for the next step
+(ROADMAP item 2): ONE differentiable op spanning
+
+    points, SH(dirs)  ->  hash-encode(density), hash-encode(color)
+                      ->  density MLP (2-layer), color MLP (3-layer)
+                      ->  (density head out (N, 1+geo), raw rgb (N, 3))
+
+with the encode->MLP boundary never leaving the kernel on Pallas backends.
+
+Everything here is composed from the existing oracles (`fused_path.ref`
+geometry + `fused_mlp.ref` MLPs) with NO new math, so the fused step is
+bit-identical to the PR 3 chain on the ref backend by construction — the
+acceptance criterion the ops-level VJP is tested against.
+
+`encode_block_dedup` is the oracle for the kernel's segment-sum dedup: the
+per-block trilinear interpolation is re-expressed as  out = W @ T[uniq]
+where W[p, u] segment-sums point p's trilinear weights at unique in-block
+address u.  Dedup stops being a gather-coalescing trick and becomes a
+*compute* structure — the table is gathered once per unique address and the
+reconstruction is a dense (B, B*8) x (B*8, F) matmul (MXU work), which is
+how the FMU win survives on hardware whose gathers don't coalesce.  It is
+allclose (not bit-identical) to `encode_from_indices`: summing duplicate
+weights before the multiply reassociates, the same tolerance class as the
+Pallas kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..fused_path import ref as fp_ref
+from ..fused_mlp import ref as mlp_ref
+
+
+def mlp_heads(hd, hc, sh, mlp_d: dict, mlp_c: dict):
+    """(density feats, color feats, SH feats) -> (density out, raw rgb).
+
+    Exactly the op sequence `Field._mlp_heads` runs on the ref backend for a
+    decomposed field (mlp2 on hd; mlp3 on concat([hc, sh])), so gradients
+    through `jax.vjp(mlp_heads, ...)` are bit-identical to the unfused
+    autodiff path.  Activations (trunc_exp / sigmoid) stay OUTSIDE the fused
+    step, in the field, where the outer autodiff already handles them.
+    """
+    out_d = mlp_ref.mlp2(hd, mlp_d["w1"], mlp_d["b1"], mlp_d["w2"], mlp_d["b2"])
+    cin = jnp.concatenate([hc, sh], axis=-1)
+    raw_c = mlp_ref.mlp3(cin, mlp_c["w1"], mlp_c["b1"], mlp_c["w2"], mlp_c["b2"],
+                         mlp_c["w3"], mlp_c["b3"])
+    return out_d, raw_c
+
+
+def fused_step_ref(points, sh, t_density, t_color, mlp_d: dict, mlp_c: dict,
+                   resolutions, dense_d, dense_c):
+    """Whole-step oracle: encode both grids + both MLP heads, shared geometry.
+
+    points (N,3) Morton-ordered unit coords, sh (N, sh_dim) view encoding.
+    Returns (out_d (N, 1+geo), raw_c (N, 3)).  Bit-identical to
+    `make_fused_encode` + `mlp_heads` on the ref backend (same primitives).
+    """
+    corners, weights = fp_ref.corner_geometry(points, resolutions)
+    idx_d = fp_ref.level_indices(corners, resolutions, t_density.shape[1], dense_d)
+    idx_c = fp_ref.level_indices(corners, resolutions, t_color.shape[1], dense_c)
+    hd = fp_ref.encode_from_indices(t_density, idx_d, weights)
+    hc = fp_ref.encode_from_indices(t_color, idx_c, weights)
+    return mlp_heads(hd, hc, sh, mlp_d, mlp_c)
+
+
+def dedup_weight_matrix(idx: jnp.ndarray, weights: jnp.ndarray):
+    """Segment-sum dedup plan for one (block, level, grid): (B,8) indices +
+    trilinear weights -> (W (B, B*8), uniq (B*8,) clamped addresses).
+
+    Sorting the block's flat corner-address stream groups duplicates into
+    runs; run r's representative address is `uniq[r]` and W[p, r] is the SUM
+    of point p's trilinear weights over its corners landing in run r.  Empty
+    trailing runs get segment_min's INT32_MAX identity, clamped to row 0 —
+    their W column is all zero, so the clamped gather contributes nothing
+    (the same harmless-row-0 convention as PAD_SENTINEL lanes, whose zero
+    weights already zero their W rows).
+    """
+    b = idx.shape[0]
+    m = b * 8
+    flat = idx.reshape(-1)
+    order = jnp.argsort(flat)
+    sa = flat[order]
+    is_start = jnp.concatenate([jnp.ones((1,), bool), sa[1:] != sa[:-1]])
+    seg = jnp.cumsum(is_start) - 1  # (m,) run id per sorted lane
+    uniq = jax.ops.segment_min(sa, seg, num_segments=m)
+    uniq = jnp.where(uniq >= 0, uniq, 0)  # guard; addresses are non-negative
+    uniq = jnp.minimum(uniq, jnp.max(flat))  # clamp INT32_MAX pad runs
+    pt = order // 8
+    w_mat = jnp.zeros((b, m), jnp.float32).at[pt, seg].add(weights.reshape(-1)[order])
+    return w_mat, uniq
+
+
+def encode_block_dedup(points, tables, resolutions, table_size: int, dense_flags,
+                       block_points: int = 256):
+    """Segment-sum-dedup encode oracle: out = W @ T[uniq] per (block, level).
+
+    Same signature family as `encode_from_indices` but computed the way the
+    fused kernel computes it; allclose to the gather-per-corner form (the
+    weight pre-sum reassociates float adds).  N must divide into blocks.
+    """
+    n = points.shape[0]
+    assert n % block_points == 0, (n, block_points)
+    corners, weights = fp_ref.corner_geometry(points, resolutions)
+    idx_l = fp_ref.level_indices(corners, resolutions, table_size, dense_flags)
+    outs = []
+    for l in range(tables.shape[0]):
+        per_block = []
+        for s in range(0, n, block_points):
+            w_mat, uniq = dedup_weight_matrix(
+                idx_l[l][s:s + block_points], weights[l][s:s + block_points]
+            )
+            per_block.append(w_mat @ tables[l][uniq].astype(jnp.float32))
+        outs.append(jnp.concatenate(per_block, axis=0))
+    return jnp.concatenate(outs, axis=-1)
+
+
+# --- residual accounting (static shapes, host-side) --------------------------
+
+def residual_bytes(policy: str, n_points: int, n_levels: int, n_features: int,
+                   table_sizes, sh_dim: int, mlp_d_params: int,
+                   mlp_c_params: int, itemsize: int = 4) -> int:
+    """Bytes held live between forward and backward for one fused step.
+
+    Counts every array the custom VJP keeps reachable as a residual,
+    including stashed *references to inputs* (they pin the buffer either
+    way); what differs between policies is the non-input set:
+
+    * "stash": weights (L,N,8) + two (L*N*8,) streams per grid + both
+      feature blocks (N, L*F) + SH + MLP params.  Tables and points are NOT
+      residuals — the backward never touches them.
+    * "recompute": points + SH + tables + MLP params, nothing else — the
+      backward re-derives geometry, streams and features from the inputs.
+
+    Pure static arithmetic so benchmarks can report production-scale
+    (L=16, N=100k) footprints without allocating them.
+    """
+    n, L, f = int(n_points), int(n_levels), int(n_features)
+    grids = len(tuple(table_sizes))
+    mlp = (int(mlp_d_params) + int(mlp_c_params)) * itemsize
+    sh = n * int(sh_dim) * itemsize
+    if policy == "stash":
+        w_stack = L * n * 8 * itemsize
+        streams = grids * 2 * (L * n * 8) * itemsize
+        feats = grids * n * L * f * itemsize
+        return w_stack + streams + feats + sh + mlp
+    if policy == "recompute":
+        points = n * 3 * itemsize
+        tables = sum(L * int(t) * f for t in table_sizes) * itemsize
+        return points + sh + tables + mlp
+    raise ValueError(f"unknown residual_policy {policy!r}")

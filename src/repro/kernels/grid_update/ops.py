@@ -39,6 +39,24 @@ def _sort_updates(idx: jnp.ndarray, vals: jnp.ndarray, table_size: int, pad_to: 
     return idx_s, vals_s
 
 
+def _segment_commit(table: jnp.ndarray, idx_s: jnp.ndarray, vals_s: jnp.ndarray) -> jnp.ndarray:
+    """Segment-merge an address-SORTED stream and scatter once per run.
+
+    The single definition of the XLA merge body: `merged_scatter_add` calls
+    it directly and the windowed/stacked commit scans it per window, so a
+    one-window stacked commit is bit-identical to one merged commit by
+    construction (same ops, same segment count).
+    """
+    m = idx_s.shape[0]
+    is_start = jnp.concatenate([jnp.ones((1,), bool), idx_s[1:] != idx_s[:-1]])
+    seg_id = jnp.cumsum(is_start) - 1  # (M,)
+    summed = jax.ops.segment_sum(vals_s.astype(jnp.float32), seg_id, num_segments=m)
+    # Representative address per run; empty trailing segments get INT32_MAX
+    # from segment_min's identity and are dropped by the scatter.
+    seg_idx = jax.ops.segment_min(idx_s, seg_id, num_segments=m)
+    return table.at[seg_idx].add(summed.astype(table.dtype), mode="drop")
+
+
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "backend", "presorted"))
 def merged_scatter_add(
     table: jnp.ndarray,
@@ -72,14 +90,7 @@ def merged_scatter_add(
         return _kernel.bum_scatter_pallas(table, idx_s, vals_s, interpret=interpret)
 
     idx_s, vals_s = _sort_updates(idx, vals, t, None, presorted=presorted)
-    m = idx_s.shape[0]
-    is_start = jnp.concatenate([jnp.ones((1,), bool), idx_s[1:] != idx_s[:-1]])
-    seg_id = jnp.cumsum(is_start) - 1  # (M,)
-    summed = jax.ops.segment_sum(vals_s.astype(jnp.float32), seg_id, num_segments=m)
-    # Representative address per run; empty trailing segments get INT32_MAX
-    # from segment_min's identity and are dropped by the scatter.
-    seg_idx = jax.ops.segment_min(idx_s, seg_id, num_segments=m)
-    return table.at[seg_idx].add(summed.astype(table.dtype), mode="drop")
+    return _segment_commit(table, idx_s, vals_s)
 
 
 @jax.jit
@@ -89,44 +100,86 @@ def num_unique_addresses(idx: jnp.ndarray) -> jnp.ndarray:
     return jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]]).sum()
 
 
-@functools.partial(jax.jit, static_argnames=("window",))
+@functools.partial(jax.jit, static_argnames=("window", "presorted", "use_pallas",
+                                              "interpret", "backend"))
 def windowed_scatter_add(
     table: jnp.ndarray,
     idx: jnp.ndarray,
     vals: jnp.ndarray,
     *,
     window: int = 4096,
+    presorted: bool = False,
+    use_pallas: bool = False,
+    interpret: bool = True,
+    backend=None,
 ) -> jnp.ndarray:
     """BUM with the paper's *sliding window*: merge duplicates only within
-    fixed-size windows of the update stream, then scatter each window's
-    merged updates.
+    windows of the update stream, then commit each window's merged updates
+    in stream order.
 
-    This is the faithful adaptation for data-parallel settings
-    (EXPERIMENTS.md §Perf iteration 3): a GLOBAL sort must materialize and
-    gather every (update, d_model) vector across shards; windows bound the
-    live set to (window x F) regardless of stream length, exactly like the
-    paper's 16-deep CAM bounds SRAM — here the window is a shard's local
-    batch.  Write count lands between naive (no merge) and global merge.
+    Two window shapes are supported:
+
+    * idx (M,) — legacy fixed-size chunking: one long stream is cut into
+      `window`-sized pieces.  The faithful adaptation for data-parallel
+      settings (EXPERIMENTS.md §Perf iteration 3): a GLOBAL sort must
+      materialize and gather every (update, d_model) vector across shards;
+      windows bound the live set to (window x F) regardless of stream
+      length, exactly like the paper's 16-deep CAM bounds SRAM.
+    * idx (W, M) with vals (W, M, F) — *stacked per-step streams*, the real
+      BUM-across-iterations analogue: each row is one training step's
+      gradient stream (e.g. the color grid's updates accumulated across an
+      F_D:F_C update-frequency window), and the whole window commits as one
+      `lax.scan` of the shared `_segment_commit` merge body in step order.
+      Because each scan iteration runs exactly the ops `merged_scatter_add`
+      would run for that step, the windowed commit is BIT-identical to W
+      sequential per-step commits — additivity buys merging, not
+      reassociation (property-tested across the {1:1, 1:0.5, 1:0.25}
+      schedules in tests/test_grid_update.py).
+
+    presorted=True promises every row of idx is already non-decreasing and
+    skips the per-window argsort (the fused-step VJP emits rows through the
+    stable order its forward — or recompute-policy backward — planned).
+    `backend` routes each window's commit stage to the Pallas kernel, same
+    contract as `merged_scatter_add`.
     """
-    t, f = table.shape
-    m = idx.shape[0]
-    pad = (-m) % window
-    if pad:
-        idx = jnp.concatenate([idx, jnp.full((pad,), t, jnp.int32)])
-        vals = jnp.concatenate([vals, jnp.zeros((pad, f), vals.dtype)])
-    n_win = idx.shape[0] // window
-    idx_w = idx.reshape(n_win, window)
-    vals_w = vals.reshape(n_win, window, f).astype(jnp.float32)
+    if backend is not None:
+        from .. import resolve_backend
+        be = resolve_backend(backend)
+        use_pallas, interpret = be.use_pallas, be.interpret
+    t = table.shape[0]
+    f = table.shape[1]
 
-    def merge_window(tbl, inp):
+    if idx.ndim == 1:
+        m = idx.shape[0]
+        pad = (-m) % window
+        if pad:
+            idx = jnp.concatenate([idx, jnp.full((pad,), t, jnp.int32)])
+            vals = jnp.concatenate([vals, jnp.zeros((pad, f), vals.dtype)])
+        n_win = idx.shape[0] // window
+        idx = idx.reshape(n_win, -1)
+        vals = vals.reshape(n_win, -1, f)
+
+    vals = vals.astype(jnp.float32)
+
+    def commit_window(tbl, inp):
         wi, wv = inp
-        order = jnp.argsort(wi)
-        wi, wv = wi[order], wv[order]
-        is_start = jnp.concatenate([jnp.ones((1,), bool), wi[1:] != wi[:-1]])
-        seg = jnp.cumsum(is_start) - 1
-        summed = jax.ops.segment_sum(wv, seg, num_segments=window)
-        seg_idx = jax.ops.segment_min(wi, seg, num_segments=window)
-        return tbl.at[seg_idx].add(summed.astype(tbl.dtype), mode="drop"), None
+        if not presorted:
+            order = jnp.argsort(wi)
+            wi, wv = wi[order], wv[order]
+        if use_pallas:
+            wi, wv = _sort_updates(wi, wv, t, _kernel.DEFAULT_BLOCK, presorted=True)
+            return _kernel.bum_scatter_pallas(tbl, wi, wv, interpret=interpret), None
+        return _segment_commit(tbl, wi, wv), None
 
-    out, _ = jax.lax.scan(merge_window, table, (idx_w, vals_w))
+    # Small static window counts (every per-step caller: the fused-step VJP
+    # commits W=1; the F_D:F_C schedules make W<=4) unroll to straightline
+    # code — a length-1 lax.scan still lowers to an XLA while loop that
+    # dynamic-slices the whole stream per trip.  Same body, same order, so
+    # the result stays bit-identical to the scan.
+    if idx.shape[0] <= 8:
+        out = table
+        for w in range(idx.shape[0]):
+            out, _ = commit_window(out, (idx[w], vals[w]))
+        return out
+    out, _ = jax.lax.scan(commit_window, table, (idx, vals))
     return out

@@ -1,0 +1,312 @@
+"""One-kernel training step: forward/grad bit-identity vs the PR 3 fused
+path, residual-policy equivalence, segment-sum dedup oracle, Pallas
+(interpret) validation, field/pipeline/trainer wiring."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Field, FieldConfig, Instant3DTrainer, TrainerConfig, occupancy
+from repro.core import encoding as enc
+from repro.core.pipeline import RenderPipeline
+from repro.core.rendering import RenderConfig, sample_ts
+from repro.kernels.hash_encode import ref as he_ref
+from repro.kernels.fused_path import ref as fp_ref, ops as fp_ops
+from repro.kernels.fused_step import ref as fs_ref, ops as fs_ops
+
+L, F = 4, 2
+TD, TC = 1 << 12, 1 << 10
+RES = he_ref.level_resolutions(L, 8, 64)
+SH = 16
+HID = 16
+GEO = 4
+
+
+def _points(rng, n=400):
+    pts = jnp.asarray(rng.uniform(0, 0.999, (n, 3)).astype(np.float32))
+    return pts[jnp.argsort(fp_ref.morton_key(pts))]
+
+
+def _tables(rng):
+    td = jnp.asarray(rng.normal(size=(L, TD, F)).astype(np.float32) * 0.1)
+    tc = jnp.asarray(rng.normal(size=(L, TC, F)).astype(np.float32) * 0.1)
+    return td, tc
+
+
+def _mlps(rng):
+    def lin(d_in, d_out):
+        w = rng.normal(size=(d_in, d_out)).astype(np.float32) * (1.0 / d_in) ** 0.5
+        return jnp.asarray(w), jnp.asarray(rng.normal(size=(d_out,)).astype(np.float32) * 0.01)
+
+    w1, b1 = lin(L * F, HID)
+    w2, b2 = lin(HID, 1 + GEO)
+    mlp_d = {"w1": w1, "b1": b1, "w2": w2, "b2": b2}
+    w1, b1 = lin(L * F + SH, HID)
+    w2, b2 = lin(HID, HID)
+    w3, b3 = lin(HID, 3)
+    mlp_c = {"w1": w1, "b1": b1, "w2": w2, "b2": b2, "w3": w3, "b3": b3}
+    return mlp_d, mlp_c
+
+
+def _sh(rng, n):
+    return jnp.asarray(rng.normal(size=(n, SH)).astype(np.float32) * 0.3)
+
+
+def _pr3_chain(points, sh, td, tc, mlp_d, mlp_c):
+    """The PR 3 fused path: fused encode op + separate ref MLP heads —
+    exactly what `Field.query_fused` runs on the ref backend."""
+    enc_op = fp_ops.make_fused_encode(RES, (TD, TC), F, backend="ref")
+    hd, hc = enc_op(points, td, tc)
+    return fs_ref.mlp_heads(hd, hc, sh, mlp_d, mlp_c)
+
+
+def _loss(outs):
+    out_d, raw_c = outs
+    return jnp.sum(out_d ** 2) + jnp.sum(raw_c * 1.7)
+
+
+# ---- ref-backend bit-identity vs the PR 3 fused path (acceptance) ----
+
+def test_fused_step_forward_bit_matches_pr3(rng):
+    pts, sh = _points(rng), _sh(rng, 400)
+    td, tc = _tables(rng)
+    mlp_d, mlp_c = _mlps(rng)
+    step = fs_ops.make_fused_step(RES, (TD, TC), F, backend="ref")
+    got = jax.jit(step)(pts, sh, td, tc, mlp_d, mlp_c)
+    want = jax.jit(_pr3_chain)(pts, sh, td, tc, mlp_d, mlp_c)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+@pytest.mark.parametrize("policy", fs_ops.RESIDUAL_POLICIES)
+def test_fused_step_grads_bit_match_pr3(policy, rng):
+    """Table grads AND MLP grads bit-identical to the PR 3 chain, under
+    either residual policy (the recompute backward replays the forward's
+    deterministic ops, so the residual quantities are bit-equal)."""
+    pts, sh = _points(rng), _sh(rng, 400)
+    td, tc = _tables(rng)
+    mlp_d, mlp_c = _mlps(rng)
+    step = fs_ops.make_fused_step(RES, (TD, TC), F, backend="ref",
+                                  residual_policy=policy)
+    gf = jax.jit(jax.grad(lambda *a: _loss(step(*a)), argnums=(1, 2, 3, 4, 5)))(
+        pts, sh, td, tc, mlp_d, mlp_c
+    )
+    gu = jax.jit(jax.grad(lambda *a: _loss(_pr3_chain(*a)), argnums=(1, 2, 3, 4, 5)))(
+        pts, sh, td, tc, mlp_d, mlp_c
+    )
+    for (path, a), b in zip(jax.tree_util.tree_leaves_with_path(gf),
+                            jax.tree_util.tree_leaves(gu)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"grad mismatch at {path}")
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas-interpret"])
+def test_residual_policies_bit_identical(backend, rng):
+    """stash vs recompute: same values, bitwise, on both backends (the
+    satellite contract — the knob moves work, never numbers)."""
+    pts, sh = _points(rng, 256), _sh(rng, 256)
+    td, tc = _tables(rng)
+    mlp_d, mlp_c = _mlps(rng)
+    mk = lambda p: fs_ops.make_fused_step(RES, (TD, TC), F, backend=backend,
+                                          residual_policy=p, block_points=64)
+    args = (pts, sh, td, tc, mlp_d, mlp_c)
+    outs = {p: jax.jit(mk(p))(*args) for p in fs_ops.RESIDUAL_POLICIES}
+    np.testing.assert_array_equal(np.asarray(outs["stash"][0]),
+                                  np.asarray(outs["recompute"][0]))
+    grads = {
+        p: jax.jit(jax.grad(lambda *a, _p=p: _loss(mk(_p)(*a)),
+                            argnums=(1, 2, 3, 4, 5)))(*args)
+        for p in fs_ops.RESIDUAL_POLICIES
+    }
+    for (path, a), b in zip(jax.tree_util.tree_leaves_with_path(grads["stash"]),
+                            jax.tree_util.tree_leaves(grads["recompute"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"policy grad mismatch at {path}")
+
+
+# ---- segment-sum dedup oracle ----
+
+def test_encode_block_dedup_matches_gather_form(rng):
+    """out = W @ T[uniq] (the kernel's compute structure) vs the per-corner
+    gather encode: allclose — summing duplicate weights before the multiply
+    reassociates float adds, never changes the math."""
+    pts = _points(rng, 512)
+    td, _ = _tables(rng)
+    dense = tuple(bool(x) for x in he_ref.level_is_dense(np.asarray(RES), TD))
+    got = fs_ref.encode_block_dedup(pts, td, RES, TD, dense, block_points=128)
+    corners, weights = fp_ref.corner_geometry(pts, RES)
+    idx = fp_ref.level_indices(corners, RES, TD, dense)
+    want = fp_ref.encode_from_indices(td, idx, weights)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5, rtol=1e-5)
+
+
+def test_dedup_weight_matrix_sums_duplicates(rng):
+    """A block of identical points: every corner address collapses into 8
+    runs and each point's W row sums to 1 (partition of unity)."""
+    pts = jnp.broadcast_to(jnp.asarray([[0.31, 0.42, 0.53]], jnp.float32), (32, 3))
+    corners, weights = fp_ref.corner_geometry(pts, RES)
+    dense = tuple(bool(x) for x in he_ref.level_is_dense(np.asarray(RES), TD))
+    idx = fp_ref.level_indices(corners, RES, TD, dense)
+    w_mat, uniq = fs_ref.dedup_weight_matrix(idx[0], weights[0])
+    assert len(np.unique(np.asarray(uniq))) <= 8
+    np.testing.assert_allclose(np.asarray(w_mat.sum(axis=1)), 1.0, atol=1e-6)
+
+
+# ---- Pallas (interpret) forward + hand-written backward ----
+
+def test_fused_step_pallas_matches_ref(rng):
+    """Interpret-mode kernel vs the ref chain: forward and every gradient
+    allclose; N=200 is a non-multiple of the 64-point block, so sentinel
+    padding is exercised in both directions."""
+    pts, sh = _points(rng, 200), _sh(rng, 200)
+    td, tc = _tables(rng)
+    mlp_d, mlp_c = _mlps(rng)
+    args = (pts, sh, td, tc, mlp_d, mlp_c)
+    step_p = fs_ops.make_fused_step(RES, (TD, TC), F, backend="pallas-interpret",
+                                    block_points=64)
+    step_r = fs_ops.make_fused_step(RES, (TD, TC), F, backend="ref")
+    fp, fr = jax.jit(step_p)(*args), jax.jit(step_r)(*args)
+    np.testing.assert_allclose(np.asarray(fp[0]), np.asarray(fr[0]), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(fp[1]), np.asarray(fr[1]), atol=1e-4, rtol=1e-4)
+    gp = jax.jit(jax.grad(lambda *a: _loss(step_p(*a)), argnums=(1, 2, 3, 4, 5)))(*args)
+    gr = jax.jit(jax.grad(lambda *a: _loss(step_r(*a)), argnums=(1, 2, 3, 4, 5)))(*args)
+    for (path, a), b in zip(jax.tree_util.tree_leaves_with_path(gp),
+                            jax.tree_util.tree_leaves(gr)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3, rtol=2e-3,
+                                   err_msg=f"pallas grad mismatch at {path}")
+
+
+# ---- residual accounting ----
+
+def test_residual_bytes_recompute_at_least_2x_smaller():
+    """At the benchmark scale the acceptance criterion is enforced at
+    (N=2048, L=6, F=2), recompute must be >= 2x below stash."""
+    kw = dict(n_points=2048, n_levels=6, n_features=2,
+              table_sizes=(1 << 13, 1 << 11), sh_dim=16,
+              mlp_d_params=12 * 64 + 64 + 64 * 16 + 16,
+              mlp_c_params=28 * 64 + 64 + 64 * 64 + 64 + 64 * 3 + 3)
+    stash = fs_ref.residual_bytes("stash", **kw)
+    rec = fs_ref.residual_bytes("recompute", **kw)
+    assert rec * 2 <= stash, (rec, stash)
+    # and the gap must WIDEN with batch size (stash scales with N, the
+    # recompute set is dominated by the static tables)
+    kw_big = dict(kw, n_points=100_000, n_levels=16)
+    assert (fs_ref.residual_bytes("stash", **kw_big)
+            / fs_ref.residual_bytes("recompute", **kw_big)) > (stash / rec)
+    with pytest.raises(ValueError):
+        fs_ref.residual_bytes("neither", **kw)
+
+
+# ---- field / pipeline / trainer wiring ----
+
+FCFG = FieldConfig(n_levels=L, max_resolution=64, log2_table_density=12,
+                   log2_table_color=10)
+
+
+def test_field_query_step_matches_query_fused(rng):
+    """`query_step` (one-kernel) vs `query_fused` (PR 3): forward and every
+    parameter gradient bitwise equal on the ref backend."""
+    field = Field(FCFG)
+    params = field.init(jax.random.PRNGKey(0))
+    pts = _points(rng, 300)
+    dirs = jnp.asarray(rng.normal(size=(300, 3)).astype(np.float32))
+    dirs = dirs / jnp.linalg.norm(dirs, axis=-1, keepdims=True)
+    target = jnp.asarray(rng.uniform(0, 1, (300, 3)).astype(np.float32))
+
+    s1, r1 = jax.jit(field.query_step)(params, pts, dirs)
+    s2, r2 = jax.jit(field.query_fused)(params, pts, dirs)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+
+    def loss(p, q):
+        sigma, rgb = q(p, pts, dirs)
+        return jnp.mean((rgb - target) ** 2) + jnp.mean(sigma) * 1e-3
+
+    g1 = jax.jit(lambda p: jax.grad(loss)(p, field.query_step))(params)
+    g2 = jax.jit(lambda p: jax.grad(loss)(p, field.query_fused))(params)
+    for (path, a), b in zip(jax.tree_util.tree_leaves_with_path(g1),
+                            jax.tree_util.tree_leaves(g2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"grad mismatch at {path}")
+
+
+def test_field_query_step_ngp_fallback(rng):
+    """Non-decomposed fields fall back to query_fused (single grid has no
+    one-kernel step; the color MLP needs the density head's geo features)."""
+    cfg = dataclasses.replace(FCFG, decomposed=False)
+    field = Field(cfg)
+    assert field._fused_step is None
+    params = field.init(jax.random.PRNGKey(0))
+    pts = _points(rng, 64)
+    dirs = jnp.ones((64, 3)) / np.sqrt(3)
+    s1, r1 = field.query_step(params, pts, dirs)
+    s2, r2 = field.query_fused(params, pts, dirs)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+
+
+def test_pipeline_fused_step_matches_fused_path(rng):
+    """Budgeted render + grads identical whether the shade stage is the
+    one-kernel step or the PR 3 encode-then-MLP split."""
+    rcfg = RenderConfig(n_samples=16)
+    field = Field(FCFG)
+    params = field.init(jax.random.PRNGKey(0))
+    b = 32
+    origins = jnp.asarray(rng.uniform(-0.5, 0.5, (b, 3)).astype(np.float32))
+    origins = origins.at[:, 2].set(4.0)
+    dirs = jnp.asarray(rng.normal(size=(b, 3)).astype(np.float32))
+    dirs = dirs.at[:, 2].set(-jnp.abs(dirs[:, 2]) - 1.0)
+    dirs = dirs / jnp.linalg.norm(dirs, axis=-1, keepdims=True)
+    ts = sample_ts(jax.random.PRNGKey(1), b, rcfg)
+    bits = jnp.ones((occupancy.OccupancyConfig().resolution ** 3,), bool)
+    target = jnp.asarray(rng.uniform(0, 1, (b, 3)).astype(np.float32))
+
+    pipe_s = RenderPipeline(field, rcfg, fused_step=True)
+    pipe_f = RenderPipeline(field, rcfg, fused_step=False)
+    assert pipe_s.fused_step and not pipe_f.fused_step
+
+    def loss(p, pipe):
+        out = pipe(p, origins, dirs, ts, bitfield=bits, budget=256)
+        return jnp.mean((out["rgb"] - target) ** 2)
+
+    os_ = pipe_s(params, origins, dirs, ts, bitfield=bits, budget=256)
+    of = pipe_f(params, origins, dirs, ts, bitfield=bits, budget=256)
+    np.testing.assert_array_equal(np.asarray(os_["rgb"]), np.asarray(of["rgb"]))
+    gs = jax.grad(loss)(params, pipe_s)
+    gf = jax.grad(loss)(params, pipe_f)
+    for (path, a), b_ in zip(jax.tree_util.tree_leaves_with_path(gs),
+                             jax.tree_util.tree_leaves(gf)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_),
+                                      err_msg=f"grad mismatch at {path}")
+
+
+def test_trainer_fused_step_training_run_bit_identical():
+    """Short real training run (occupancy, compaction, F_D:F_C freeze
+    schedule all active): params, optimizer moments and occupancy EMA are
+    bitwise equal with the one-kernel step on vs off."""
+    from repro.data import build_dataset, RaySampler
+
+    rcfg = RenderConfig(n_samples=8)
+    _, ds = build_dataset(seed=0, n_views=3, h=16, w=16, cfg=rcfg, gt_samples=16)
+    base = TrainerConfig(n_rays=128, iters=16, render=rcfg,
+                         occ=occupancy.OccupancyConfig(update_interval=4,
+                                                       warmup_steps=4))
+
+    def run(fused_step):
+        tr = Instant3DTrainer(Field(FCFG), dataclasses.replace(base, fused_step=fused_step))
+        state = tr.init(jax.random.PRNGKey(0))
+        state, _ = tr.train(state, RaySampler(ds), iters=16, log_every=16)
+        return state
+
+    s1, s2 = run(True), run(False)
+    for (path, a), b in zip(jax.tree_util.tree_leaves_with_path(s1.params),
+                            jax.tree_util.tree_leaves(s2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"param mismatch at {path}")
+    for a, b in zip(jax.tree_util.tree_leaves(s1.opt_state),
+                    jax.tree_util.tree_leaves(s2.opt_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(s1.occ_state.density_ema),
+                                  np.asarray(s2.occ_state.density_ema))

@@ -84,6 +84,54 @@ def test_merge_reduces_writes(rng):
     assert uniq < m / 5
 
 
+@pytest.mark.parametrize("freq,expected_w", [(1.0, 1), (0.5, 2), (0.25, 4)])
+@pytest.mark.parametrize("presorted", [True, False])
+def test_windowed_stacked_commits_match_per_step_across_schedules(
+        freq, expected_w, presorted, rng):
+    """BUM across iterations: gradient streams accumulated over an F_D:F_C
+    update-frequency window ({1:1, 1:0.5, 1:0.25}) and committed as ONE
+    stacked windowed call are BIT-identical to committing every step's
+    stream sequentially — additivity buys merging, not reassociation.  The
+    window boundaries come from the trainer's real schedule predicate."""
+    from repro.core.trainer import _branch_update
+
+    t, f, m = 96, 2, 200
+    table_seq = jnp.asarray(rng.normal(size=(t, f)).astype(np.float32))
+    table_win = table_seq
+    pending_idx, pending_vals = [], []
+    for i in range(8):
+        idx = rng.integers(0, t, size=m).astype(np.int32)
+        if presorted:
+            idx = np.sort(idx)
+        idx = jnp.asarray(idx)
+        vals = jnp.asarray(rng.normal(size=(m, f)).astype(np.float32))
+        pending_idx.append(idx)
+        pending_vals.append(vals)
+        table_seq = ops.merged_scatter_add(table_seq, idx, vals,
+                                           presorted=presorted)
+        if _branch_update(i, freq):
+            assert len(pending_idx) == expected_w
+            table_win = ops.windowed_scatter_add(
+                table_win, jnp.stack(pending_idx), jnp.stack(pending_vals),
+                presorted=presorted,
+            )
+            pending_idx, pending_vals = [], []
+    assert not pending_idx  # every stream committed (schedule flushed)
+    np.testing.assert_array_equal(np.asarray(table_win), np.asarray(table_seq))
+
+
+def test_windowed_stacked_pallas_matches_xla(rng):
+    """The stacked form's per-window Pallas commit stays allclose to the
+    XLA segment merge (same contract as merged_scatter_add)."""
+    t, f, w, m = 64, 2, 3, 150
+    table = jnp.asarray(rng.normal(size=(t, f)).astype(np.float32))
+    idx = jnp.asarray(np.sort(rng.integers(0, t, size=(w, m)).astype(np.int32), axis=1))
+    vals = jnp.asarray(rng.normal(size=(w, m, f)).astype(np.float32))
+    got = ops.windowed_scatter_add(table, idx, vals, presorted=True, use_pallas=True)
+    want = ops.windowed_scatter_add(table, idx, vals, presorted=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-5)
+
+
 @pytest.mark.parametrize("m,window", [(100, 32), (1000, 256), (64, 64), (10, 16)])
 def test_windowed_merge_matches_naive(m, window, rng):
     """The sliding-window BUM (paper-faithful bounded merge) is exact too —

@@ -49,6 +49,10 @@ class Rule:
     # keys with `max` must not grow, keys with `min` must not shrink)
     rel_tol: float | None = None
     abs_tol: float | None = None
+    # trajectory baseline key, when it differs from `path` — lets a NEW key
+    # gate against an OLD committed key (e.g. the one-kernel step's time
+    # ratio against the PR 3 fused-path ratio the repo already banked)
+    base_path: str | None = None
 
 
 # Rule table: what each benchmark artifact promises.
@@ -61,6 +65,25 @@ SPECS: dict[str, list[Rule]] = {
     "BENCH_fused_path.json": [
         Rule("time_ratio", max=1.0, rel_tol=0.10),
         Rule("params_bit_identical", flag=True),
+        # one-kernel training step (PR 6): same promise as the fused path —
+        # never slower than the compacted baseline.  On the ref backend the
+        # bar is parity, not a win: XLA CSE compiles all three routes to the
+        # same program (identical flop counts under compile().cost_analysis()),
+        # so sub-1.0 medians are locality/noise; the structural speedup
+        # (VMEM-resident epilogue, dedup'd gathers, no per-op dispatch) is a
+        # Pallas-hardware claim, re-baselined when pallas-tpu runs compiled.
+        Rule("fused_step.time_ratio", max=1.0, full_only=True, rel_tol=0.10),
+        # the full-step ratio must also track the committed PR 3 fused-path
+        # trajectory (the one-kernel route subsumes the fused path, so it
+        # must not cost measurably more than what it replaced)
+        Rule("fused_step.time_ratio_full_step", max=1.0, full_only=True,
+             base_path="time_ratio", abs_tol=0.05),
+        Rule("fused_step.params_bit_identical", flag=True),
+        # recompute residual policy must halve (or better) what stays live
+        # between forward and backward — static accounting at the run's
+        # steady-state budget (full runs only: at smoke budgets the pinned
+        # table aliases dominate both policies and the ratio is meaningless)
+        Rule("fused_step.residual_bytes.ratio", max=0.5, full_only=True),
     ],
     "BENCH_sampler.json": [
         Rule("off_bit_identical", flag=True),
@@ -127,7 +150,7 @@ def gate_artifact(artifact: str, ref: str) -> list[str]:
 
     for rule in SPECS[artifact]:
         val = lookup(fresh, rule.path)
-        bval = lookup(base, rule.path) if base is not None else None
+        bval = lookup(base, rule.base_path or rule.path) if base is not None else None
         label = f"{artifact}:{rule.path}"
         problems = []
         notes = []
