@@ -3,7 +3,18 @@
 Times each step of the pipeline separately (sample rays / encode (Step 3-1)
 / MLP (Step 3-2) / composite (Step 4) / full fwd+bwd) and reports the
 fraction attributable to grid interpolation + its backward — the paper's
-~80% bottleneck claim."""
+~80% bottleneck claim.
+
+Also the observability overhead budget: measures the disabled-mode cost of
+one `repro.obs.trace.span` (the `REPRO_OBS`-off no-op path), scales it by
+the spans a training step crosses, and emits ``BENCH_obs_overhead.json``
+whose ``overhead_fraction`` tools/bench_gate.py caps at < 1% of a step —
+the contract that lets instrumentation sit permanently on the hot paths.
+"""
+import argparse
+import json
+from pathlib import Path
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -14,9 +25,53 @@ from repro.core.rendering import sample_ts
 from repro.core import encoding
 from repro.data import RaySampler
 from repro.kernels.fused_step import ref as fs_ref
+from repro.obs import trace
+
+OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_obs_overhead.json"
+
+# spans the instrumented trainer loop crosses per iteration, counted
+# generously: trainer step + occupancy update + fused fwd/bwd + the four
+# pipeline stage spans (which actually only fire at trace time, i.e. on
+# compiles — charging them per step keeps the budget conservative)
+SPANS_PER_STEP = 8
 
 
-def run():
+def _span_cost_ns(n: int) -> float:
+    t0 = trace.clock_ns()
+    for _ in range(n):
+        with trace.span("bench/overhead_probe", cat="bench"):
+            pass
+    return (trace.clock_ns() - t0) / n
+
+
+def obs_overhead(step_us: float, smoke: bool) -> dict:
+    """Micro-bench the span fast paths and write the gated artifact."""
+    n = 50_000 if smoke else 200_000
+    was_on = trace.enabled()
+    trace.set_enabled(False)
+    disabled_ns = _span_cost_ns(n)
+    trace.set_enabled(True)
+    enabled_ns = _span_cost_ns(n)       # for the report; not gated
+    trace.set_enabled(was_on)
+    trace.clear()
+    result = {
+        "smoke": smoke,
+        "span_disabled_ns": disabled_ns,
+        "span_enabled_ns": enabled_ns,
+        "spans_per_step": SPANS_PER_STEP,
+        "step_us": step_us,
+        # what REPRO_OBS=off costs an instrumented training step
+        "overhead_fraction": disabled_ns * SPANS_PER_STEP / (step_us * 1e3),
+    }
+    OUT_PATH.write_text(json.dumps(result, indent=2) + "\n")
+    common.emit("obs_overhead[span]", disabled_ns / 1e3,
+                f"disabled_ns={disabled_ns:.0f};enabled_ns={enabled_ns:.0f};"
+                f"fraction_of_step={result['overhead_fraction']:.2e}"
+                f" -> {OUT_PATH.name}")
+    return result
+
+
+def run(smoke: bool = False):
     scene, ds = common.dataset()
     field = Field(common.BASE_FIELD)
     params = field.init(jax.random.PRNGKey(0))
@@ -28,31 +83,39 @@ def run():
     dirs = jnp.broadcast_to(batch.dirs[:, None], (ts.shape[0], ts.shape[1], 3)).reshape(-1, 3)
 
     us = {}
+
+    def leg(name, fn, *args, iters):
+        # per-leg timings ride through obs spans, so a traced bench run
+        # (REPRO_OBS=1) exports the same breakdown as its CSV rows
+        with trace.span(f"bench/breakdown/{name}", cat="bench",
+                        args={"iters": iters}):
+            us[name] = common.timeit(fn, *args, iters=iters)
+
     enc_fwd = jax.jit(lambda p, tb: field.density_enc(p, tb))
-    us["encode_fwd"] = common.timeit(enc_fwd, pts, params["density_grid"], iters=10)
+    leg("encode_fwd", enc_fwd, pts, params["density_grid"], iters=10)
 
     enc_bwd = jax.jit(jax.grad(lambda tb: field.density_enc(pts, tb).sum()))
-    us["encode_bwd"] = common.timeit(enc_bwd, params["density_grid"], iters=10)
+    leg("encode_bwd", enc_bwd, params["density_grid"], iters=10)
 
     mlp = jax.jit(lambda p: field.query(p, pts, dirs))
-    us["full_field_query"] = common.timeit(mlp, params, iters=10)
+    leg("full_field_query", mlp, params, iters=10)
 
     def full_loss(p):
         sigma, rgb = field.query(p, pts, dirs)
         return jnp.mean(sigma) + jnp.mean(rgb)
-    us["full_fwd_bwd"] = common.timeit(jax.jit(jax.grad(full_loss)), params, iters=5)
+    leg("full_fwd_bwd", jax.jit(jax.grad(full_loss)), params, iters=5)
 
     # the two fused routes over the same batch: PR 3 (fused encode, split
     # MLPs) and PR 6 (whole encode->MLP chain in one custom-VJP op)
     def fused_loss(p):
         sigma, rgb = field.query_fused(p, pts, dirs)
         return jnp.mean(sigma) + jnp.mean(rgb)
-    us["fused_path_fwd_bwd"] = common.timeit(jax.jit(jax.grad(fused_loss)), params, iters=5)
+    leg("fused_path_fwd_bwd", jax.jit(jax.grad(fused_loss)), params, iters=5)
 
     def step_loss(p):
         sigma, rgb = field.query_step(p, pts, dirs)
         return jnp.mean(sigma) + jnp.mean(rgb)
-    us["fused_step_fwd_bwd"] = common.timeit(jax.jit(jax.grad(step_loss)), params, iters=5)
+    leg("fused_step_fwd_bwd", jax.jit(jax.grad(step_loss)), params, iters=5)
 
     grid_us = us["encode_fwd"] + us["encode_bwd"]
     frac = grid_us / us["full_fwd_bwd"]
@@ -74,8 +137,13 @@ def run():
                 f"n_points={pts.shape[0]};stash={rb['stash']};"
                 f"recompute={rb['recompute']};"
                 f"ratio={rb['recompute'] / rb['stash']:.3f}")
+
+    obs_overhead(us["full_fwd_bwd"], smoke)
     return us
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short run for CI (fewer micro-bench iterations)")
+    run(**vars(ap.parse_args()))

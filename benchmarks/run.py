@@ -19,7 +19,7 @@ import traceback
 # (name, module, output artifact or None) — artifacts land in the repo root
 # and are what CI gates on; suites without one only emit CSV rows.
 SUITES = [
-    ("fig4_breakdown", "bench_breakdown", None),
+    ("fig4_breakdown", "bench_breakdown", "BENCH_obs_overhead.json"),
     ("fig5_pace", "bench_pace", None),
     ("table1_grid_sizes", "bench_grid_sizes", None),
     ("table2_update_freq", "bench_update_freq", "BENCH_update_freq.json"),

@@ -12,13 +12,13 @@ analytic ground truth, so you can watch per-scene PSNR climb while all
 scenes are still training.
 """
 import argparse
-import time
 
 import numpy as np
 
 from repro.core import FieldConfig, TrainerConfig, losses, occupancy
 from repro.core.rendering import RenderConfig
 from repro.data import build_dataset
+from repro.obs import export as obs_export, metrics as obs_metrics, trace as obs_trace
 from repro.serve3d import ReconstructionService
 
 
@@ -33,7 +33,13 @@ def main():
                     help="train-cohort cap (default unlimited; 1 = pure time-slicing)")
     ap.add_argument("--dense-render", action="store_true",
                     help="serve views dense instead of redistributed")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace JSON of the demo run")
     args = ap.parse_args()
+
+    # the demo always runs instrumented: the progress lines below and the
+    # final summary both read from the one obs metrics plane
+    obs_trace.configure(enabled=True)
 
     render = RenderConfig(n_samples=16)
     field_cfg = FieldConfig(n_levels=4, max_resolution=64,
@@ -57,7 +63,7 @@ def main():
                                    target_iters=args.iters, seed=i)
         datasets[sid] = ds
 
-    t0 = time.perf_counter()
+    t0 = obs_trace.clock()
     held_out = 0  # every served render targets view 0, scored against its GT
 
     def hook(svc, event):
@@ -69,7 +75,10 @@ def main():
         for r in event["results"]:
             gt = datasets[r.session_id].images[held_out]
             psnr = float(losses.psnr(np.asarray(r.rgb), gt))
-            print(f"[{time.perf_counter() - t0:6.1f}s] render {r.session_id} "
+            # served-view quality lands in the same metrics plane the final
+            # summary prints from — one source for interactive and exported
+            obs_metrics.gauge(f"demo.psnr_db.{r.session_id}").set(psnr)
+            print(f"[{obs_trace.clock() - t0:6.1f}s] render {r.session_id} "
                   f"@step {r.snapshot_step:3d} (v{r.snapshot_version})  "
                   f"psnr {psnr:5.2f} dB  latency {r.latency_s * 1e3:5.0f} ms")
 
@@ -79,6 +88,10 @@ def main():
     for p in tel["sessions"]:
         sess = service.sessions[p["session_id"]]
         ev = sess.evaluate(views=[0, 1])
+        obs_metrics.gauge(f"demo.final_psnr_rgb_db.{p['session_id']}").set(
+            ev["psnr_rgb"])
+        obs_metrics.gauge(f"demo.final_psnr_depth_db.{p['session_id']}").set(
+            ev["psnr_depth"])
         print(f"  {p['session_id']}: {p['step']}/{p['target_iters']} iters, "
               f"psnr rgb {ev['psnr_rgb']:.2f} dB  depth {ev['psnr_depth']:.2f} dB  "
               f"(train {p['train_wall_s']:.1f}s)")
@@ -87,6 +100,10 @@ def main():
           f"({tel['scenes_per_sec']:.3f} scenes/sec)  "
           f"renders {r.get('count', 0)}: p50 {r.get('p50_ms', 0):.0f} ms, "
           f"p95 {r.get('p95_ms', 0):.0f} ms")
+    print("\nmetrics snapshot:")
+    print(obs_export.format_metrics(service.metrics()))
+    if args.trace_out:
+        print(f"\ntrace -> {service.dump_trace(args.trace_out)}")
 
 
 if __name__ == "__main__":

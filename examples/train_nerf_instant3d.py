@@ -19,6 +19,7 @@ from repro.checkpoint import CheckpointManager
 from repro.core import Field, FieldConfig, Instant3DTrainer, TrainerConfig, occupancy
 from repro.core.rendering import RenderConfig
 from repro.data import build_dataset, RaySampler
+from repro.obs import export as obs_export, trace as obs_trace
 from repro.runtime import DriverConfig, StragglerStats
 
 
@@ -46,7 +47,14 @@ def main():
                          "on its live segments via inverse-CDF placement — "
                          "finer live-region stratification at <= the same "
                          "compacted point budget")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace JSON of the run (enables obs)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the final metrics snapshot JSON (enables obs)")
     args = ap.parse_args()
+
+    if args.trace_out or args.metrics_out:
+        obs_trace.configure(enabled=True)
 
     # explicit flag wins; otherwise the registry default ($REPRO_BACKEND / auto)
     be = kernels.set_backend(args.backend) if args.backend else kernels.get_backend()
@@ -113,6 +121,10 @@ def main():
     ckpt.wait()
     ev = trainer.evaluate(state.params, ds, views=[0, 1, 2])
     print(f"final PSNR rgb={ev['psnr_rgb']:.2f} depth={ev['psnr_depth']:.2f}")
+    if args.trace_out:
+        print(f"trace -> {obs_export.dump_trace(args.trace_out, process_name='repro.train')}")
+    if args.metrics_out:
+        print(f"metrics -> {obs_export.dump_metrics(args.metrics_out, extra={'iters': done})}")
 
 
 if __name__ == "__main__":

@@ -49,6 +49,7 @@ from . import rendering as _r
 from ..kernels.volume_render import ops as vr_ops
 from ..kernels.volume_render import ref as vr_ref
 from ..kernels.fused_path import ref as fp_ref
+from ..obs import trace as _trace
 
 
 def _cube_root(n: int) -> int:
@@ -330,8 +331,13 @@ class RenderPipeline:
         """
         b, s = ts.shape
         n = b * s
-        flat_pts, flat_dirs, unit = self.generate_samples(origins, dirs, ts)
-        live = self.cull(flat_pts, unit, bitfield=bitfield, mask_fn=mask_fn)
+        # stage spans are host-side: under jit they time the *trace* of each
+        # stage (the compile-side cost breakdown); in eager use they time
+        # execution.  Either way they never touch array values.
+        with _trace.span("pipeline/sample", cat="pipeline"):
+            flat_pts, flat_dirs, unit = self.generate_samples(origins, dirs, ts)
+        with _trace.span("pipeline/cull", cat="pipeline"):
+            live = self.cull(flat_pts, unit, bitfield=bitfield, mask_fn=mask_fn)
 
         deltas = probe_live_frac = None
         # redistribution allocates per ray, so it needs budget >= B for at
@@ -340,28 +346,36 @@ class RenderPipeline:
         # silently exceeding the ceiling
         if (self.redistribute_on and bitfield is not None
                 and budget is not None and int(budget) >= b):
-            # the uniform candidates' liveness doubles as the (jittered)
-            # occupancy probe; their mean is exactly the uniform sampler's
-            # live fraction — what the budget controller calibrates against
-            probe_live_frac = jnp.mean(live.astype(jnp.float32))
-            s = min(s, min(int(budget), n) // b)
-            ts, deltas = self.redistribute(ts, live.reshape(b, -1), n_out=s)
-            budget = n = b * s
-            flat_pts, flat_dirs, unit = self.generate_samples(origins, dirs, ts)
-            live = self.cull(flat_pts, unit, bitfield=bitfield, mask_fn=mask_fn)
+            with _trace.span("pipeline/redistribute", cat="pipeline"):
+                # the uniform candidates' liveness doubles as the (jittered)
+                # occupancy probe; their mean is exactly the uniform sampler's
+                # live fraction — what the budget controller calibrates against
+                probe_live_frac = jnp.mean(live.astype(jnp.float32))
+                s = min(s, min(int(budget), n) // b)
+                ts, deltas = self.redistribute(ts, live.reshape(b, -1), n_out=s)
+                budget = n = b * s
+                flat_pts, flat_dirs, unit = self.generate_samples(origins, dirs, ts)
+                live = self.cull(flat_pts, unit, bitfield=bitfield, mask_fn=mask_fn)
 
         if budget is None:
-            sigma, rgb = self.shade(params, unit, flat_dirs)
+            with _trace.span("pipeline/shade", cat="pipeline",
+                             args={"points": n, "dense": True}):
+                sigma, rgb = self.shade(params, unit, flat_dirs)
             sigma = jnp.where(live, sigma, 0.0)
             n_live = jnp.sum(live.astype(jnp.int32))
             overflow = jnp.zeros((), jnp.int32)
             points_queried = n
         else:
             budget = min(int(budget), n)
-            plan = self.compact(live, budget, unit)
-            sigma_c, rgb_c = self.shade(
-                params, unit[plan.idx], flat_dirs[plan.idx], fused=self.fused_path
-            )
+            with _trace.span("pipeline/compact", cat="pipeline",
+                             args={"budget": budget}):
+                plan = self.compact(live, budget, unit)
+            with _trace.span("pipeline/shade", cat="pipeline",
+                             args={"points": budget, "dense": False}):
+                sigma_c, rgb_c = self.shade(
+                    params, unit[plan.idx], flat_dirs[plan.idx],
+                    fused=self.fused_path,
+                )
             sigma = jnp.zeros((n,), sigma_c.dtype).at[plan.idx].set(
                 jnp.where(plan.keep, sigma_c, 0.0)
             )
@@ -371,7 +385,8 @@ class RenderPipeline:
             n_live, overflow = plan.n_live, plan.overflow
             points_queried = budget
 
-        out = self.composite(sigma, rgb, ts, deltas)
+        with _trace.span("pipeline/composite", cat="pipeline"):
+            out = self.composite(sigma, rgb, ts, deltas)
         out.update(
             live_fraction=(
                 probe_live_frac if probe_live_frac is not None

@@ -16,7 +16,6 @@ back-propagation every 1/(1-F) iterations" (paper §4.6).
 from __future__ import annotations
 
 import math
-import time
 from dataclasses import dataclass, field as dc_field
 from typing import Any, NamedTuple
 
@@ -27,6 +26,8 @@ import numpy as np
 from . import field as field_lib
 from . import losses, occupancy, rendering
 from .pipeline import RenderPipeline, suggest_budget
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from ..optim import AdamW
 
 # note: the sampler/dataset arguments below are duck-typed (repro.data types);
@@ -283,6 +284,25 @@ _COHORT_STEP_CACHE: dict[tuple, Any] = {}
 _OCC_UPDATE_CACHE: dict[tuple, Any] = {}
 
 
+def _cohort_step_key(field_cfg, cfg: TrainerConfig, freeze_color: bool,
+                     freeze_density: bool, budget: int | None, use_bits: bool,
+                     m: int) -> tuple:
+    """Cache key for one compiled step variant — also the observable the
+    trace layer uses to split trainer/step_compile from trainer/step (a key
+    first enters the cache on the same call that compiles it)."""
+    return (field_cfg, cfg, bool(freeze_color), bool(freeze_density),
+            budget, bool(use_bits), int(m))
+
+
+def step_variant_cached(field_cfg, cfg: TrainerConfig, freeze_color: bool,
+                        freeze_density: bool, budget: int | None,
+                        use_bits: bool, m: int) -> bool:
+    """Whether this step variant has already been built (and therefore
+    compiled on its first call)."""
+    return _cohort_step_key(field_cfg, cfg, freeze_color, freeze_density,
+                            budget, use_bits, m) in _COHORT_STEP_CACHE
+
+
 def cohort_step_fn(field_cfg, cfg: TrainerConfig, freeze_color: bool,
                    freeze_density: bool, budget: int | None, use_bits: bool,
                    m: int):
@@ -292,8 +312,11 @@ def cohort_step_fn(field_cfg, cfg: TrainerConfig, freeze_color: bool,
     M; ts is shared (cohort members march the same step-keyed sample
     stream).  Stacked params/opt buffers are donated — the cohort advances
     in place like the per-instance step."""
-    key = (field_cfg, cfg, bool(freeze_color), bool(freeze_density),
-           budget, bool(use_bits), int(m))
+    key = _cohort_step_key(field_cfg, cfg, freeze_color, freeze_density,
+                           budget, use_bits, m)
+    if obs_trace.enabled():
+        which = "miss" if key not in _COHORT_STEP_CACHE else "hit"
+        obs_metrics.counter(f"trainer.step_cache.{which}").inc()
     if key not in _COHORT_STEP_CACHE:
         field = field_lib.Field(field_cfg)
         pipeline = RenderPipeline(
@@ -610,7 +633,9 @@ def train_cohort(
         raise ValueError("cohort members must be at the same training step")
     iters = iters if iters is not None else cfg.iters
     key = jax.random.PRNGKey(cfg.seed)
-    t0 = time.perf_counter()
+    # one clock for history wall_s, spans and benchmarks (repro.obs.trace owns
+    # it) — telemetry and bench timings can never disagree on step wall time
+    t0 = obs_trace.clock()
 
     histories = [
         {"step": [], "loss": [], "live_fraction": [], "wall_s": [],
@@ -700,17 +725,39 @@ def train_cohort(
             groups = build_groups(want, member_state)
 
         where = [None] * m  # member -> (group, row) for this iteration
+        obs_on = obs_trace.enabled()
         for g in groups:
             batch = g.sample(samplers, key_batch, cfg.n_rays)
+            if obs_on:
+                # compile/execute split: a step variant's first-ever call is
+                # the one that traces + compiles it (its cache key appears on
+                # that call — `step_variant_cached`/`step_cache_keys` is the
+                # observable).  The whole probe sits behind the knob so the
+                # disabled hot loop never hashes a config tuple.
+                fresh = not step_variant_cached(
+                    field_cfg, cfg, freeze_color, freeze_density,
+                    g.budget, g.use_bits, len(g.members))
+                span = obs_trace.span(
+                    "trainer/step_compile" if fresh else "trainer/step",
+                    cat="trainer",
+                    args={"step": int(i), "cohort": len(g.members),
+                          "budget": g.budget, "use_bits": g.use_bits})
+            else:
+                span = obs_trace.NULL
             fn = cohort_step_fn(field_cfg, cfg, freeze_color, freeze_density,
                                 g.budget, g.use_bits, len(g.members))
-            g.params, g.opt_state, loss, aux = fn(
-                g.params, g.opt_state, batch, ts, g.ema
-            )
+            with span:
+                g.params, g.opt_state, loss, aux = fn(
+                    g.params, g.opt_state, batch, ts, g.ema
+                )
             g.last_aux = aux
             g.last_loss = loss
             for r, k in enumerate(g.members):
                 where[k] = (g, r)
+        if obs_on:
+            obs_metrics.counter("trainer.steps").inc(m)
+            obs_metrics.gauge("trainer.cohort_size").set(m)
+            obs_metrics.gauge("trainer.cohort_groups").set(len(groups))
         # one stacked (M,) overflow entry per iteration (the single-group
         # common case appends the step's own aux with no regather)
         if len(groups) == 1:
@@ -738,7 +785,10 @@ def train_cohort(
                 recent_sums = window_sums(window[-cfg.occ.update_interval:])
             for g in groups:
                 upd = occ_update_fn(field_cfg, cfg.occ, len(g.members))
-                new_occ = upd(g.params, g.ema, g.occ_step, key_occ)
+                with obs_trace.span("trainer/occ_update", cat="trainer",
+                                    args={"step": int(i),
+                                          "cohort": len(g.members)}):
+                    new_occ = upd(g.params, g.ema, g.occ_step, key_occ)
                 g.ema, g.occ_step = new_occ.density_ema, new_occ.step
                 # re-measure the batch live fraction at the occupancy cadence
                 # (one host sync per update, not per step) to size the budget
@@ -761,7 +811,7 @@ def train_cohort(
                         trainers[k]._live_frac = measured
 
         if (local_i + 1) % log_every == 0 or local_i == iters - 1:
-            wall = time.perf_counter() - t0
+            wall = obs_trace.clock() - t0
             for g in groups:
                 loss_h = np.asarray(g.last_loss)
                 live_h = np.asarray(g.last_aux["live_fraction"])
@@ -777,6 +827,19 @@ def train_cohort(
                     h["wall_s"].append(wall)
                     if callback is not None:
                         callback(i + 1, g.member_tree(g.params, k), h)
+                if obs_on:
+                    # strays folded into the registry at the log cadence —
+                    # these host syncs already happen for the history above,
+                    # so the metrics plane adds no extra device round-trips.
+                    # Gauges carry last-step values; per-interval totals stay
+                    # in the returned history (overflow_total/overflow_steps).
+                    obs_metrics.gauge("trainer.live_fraction").set(
+                        float(live_h[-1]))
+                    obs_metrics.gauge("trainer.loss").set(float(loss_h[-1]))
+                    obs_metrics.gauge("trainer.points_per_step").set(
+                        int(np.sum(pts_h)))
+                    obs_metrics.gauge("trainer.overflow_last_step").set(
+                        int(np.sum(ov_h)))
 
     new_states = [None] * m
     for g in groups:

@@ -138,10 +138,20 @@ def dedup_stats(points, resolutions, dense_flags, table_size: int,
         for s in range(0, n, block_points):
             blk = a[s : s + block_points].reshape(-1)
             block_ratios.append(np.unique(blk).size / blk.size)
-    return {
+    stats = {
         "total_reads": int(total),
         "unique_reads_global": int(uniq_global),
         "unique_ratio_global": uniq_global / total,
         "unique_ratio_block": float(np.mean(block_ratios)),
         "n_blocks": len(block_ratios),
     }
+    # fold into the obs registry so traced bench/serve runs export the dedup
+    # figures of merit alongside everything else (no-op when obs is off)
+    from ...obs import metrics as _obs_metrics
+    from ...obs import trace as _obs_trace
+    if _obs_trace.enabled():
+        _obs_metrics.gauge("fused_path.dedup.unique_ratio_block").set(
+            stats["unique_ratio_block"])
+        _obs_metrics.gauge("fused_path.dedup.unique_ratio_global").set(
+            stats["unique_ratio_global"])
+    return stats

@@ -51,6 +51,7 @@ from ..fused_path import ref as fp_ref
 from ..hash_encode import ref as he_ref
 from ..hash_encode import ops as he_ops
 from ..grid_update import ops as gu_ops
+from ...obs import trace as _trace
 
 DEFAULT_BLOCK_POINTS = _kernel.DEFAULT_BLOCK_POINTS
 RESIDUAL_POLICIES = ("stash", "recompute")
@@ -153,26 +154,40 @@ def make_fused_step(
 
     @jax.custom_vjp
     def step(points, sh, t_density, t_color, mlp_d, mlp_c):
-        return _forward(points, sh, (t_density, t_color), mlp_d, mlp_c)
+        # non-differentiated calls (pure renders) run the primal, not
+        # step_fwd — span both so serve-side traces see the kernel too
+        with _trace.span("kernels/fused_step/fwd", cat="kernels",
+                         args={"policy": residual_policy, "backend": be.name}):
+            return _forward(points, sh, (t_density, t_color), mlp_d, mlp_c)
 
     def step_fwd(points, sh, t_density, t_color, mlp_d, mlp_c):
-        tables = (t_density, t_color)
-        if be.use_pallas or residual_policy == "recompute":
-            # Nothing but input aliases crosses to the backward; notably the
-            # forward also SKIPS stream planning — pure renders pay zero
-            # backward-prep cost, and a frozen grid's recomputed plan is
-            # dead code in the backward.
-            outs = _forward(points, sh, tables, mlp_d, mlp_c)
-            return outs, (points, sh, tables, mlp_d, mlp_c, None)
-        idx, weights = _geometry(points)
-        hd = fp_ref.encode_from_indices(tables[0], idx[0], weights)
-        hc = fp_ref.encode_from_indices(tables[1], idx[1], weights)
-        outs = ref.mlp_heads(hd, hc, sh, mlp_d, mlp_c)
-        protos = tuple(jnp.zeros((0,), t.dtype) for t in tables)
-        stash = (jnp.stack(weights), _plan_streams(idx), hd, hc)
-        return outs, (points, sh, protos, mlp_d, mlp_c, stash)
+        # host-side span: under jit this times the forward's trace (the
+        # compile-side cost of the one-kernel step); with REPRO_OBS=jax the
+        # jax.profiler annotation carries the name into XLA device traces
+        with _trace.span("kernels/fused_step/fwd", cat="kernels",
+                         args={"policy": residual_policy, "backend": be.name}):
+            tables = (t_density, t_color)
+            if be.use_pallas or residual_policy == "recompute":
+                # Nothing but input aliases crosses to the backward; notably
+                # the forward also SKIPS stream planning — pure renders pay
+                # zero backward-prep cost, and a frozen grid's recomputed
+                # plan is dead code in the backward.
+                outs = _forward(points, sh, tables, mlp_d, mlp_c)
+                return outs, (points, sh, tables, mlp_d, mlp_c, None)
+            idx, weights = _geometry(points)
+            hd = fp_ref.encode_from_indices(tables[0], idx[0], weights)
+            hc = fp_ref.encode_from_indices(tables[1], idx[1], weights)
+            outs = ref.mlp_heads(hd, hc, sh, mlp_d, mlp_c)
+            protos = tuple(jnp.zeros((0,), t.dtype) for t in tables)
+            stash = (jnp.stack(weights), _plan_streams(idx), hd, hc)
+            return outs, (points, sh, protos, mlp_d, mlp_c, stash)
 
     def step_bwd(res, g_out):
+        with _trace.span("kernels/fused_step/bwd", cat="kernels",
+                         args={"policy": residual_policy, "backend": be.name}):
+            return _step_bwd(res, g_out)
+
+    def _step_bwd(res, g_out):
         points, sh, tables, mlp_d, mlp_c, stash = res
         if be.use_pallas:
             return _kernel_bwd(points, sh, tables, mlp_d, mlp_c, g_out)

@@ -23,6 +23,8 @@ from .. import kernels
 from ..core import FieldConfig, TrainerConfig, occupancy
 from ..core.rendering import RenderConfig, sphere_poses
 from ..data import build_dataset
+from ..obs import export as obs_export
+from ..obs import trace as obs_trace
 from ..serve3d import ReconstructionService
 
 
@@ -88,7 +90,16 @@ def main(argv=None):
     ap.add_argument("--persist-dir", default=None,
                     help="persist published snapshots (atomic per-session checkpoints)")
     ap.add_argument("--backend", default=None)
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace JSON of the run (enables obs)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the final metrics snapshot JSON (enables obs)")
+    ap.add_argument("--metrics-every", type=int, default=0,
+                    help="print a serve3d metrics snapshot every N quanta")
     args = ap.parse_args(argv)
+
+    if args.trace_out or args.metrics_out or args.metrics_every:
+        obs_trace.configure(enabled=True)
 
     be = kernels.set_backend(args.backend) if args.backend else kernels.get_backend()
     print(f"kernel backend: {be.name}")
@@ -103,6 +114,8 @@ def main(argv=None):
     slice_marks = {boundaries[int(round(i))] for i in picks}
     render_steps = {sid: slice_marks for sid in datasets}
 
+    quanta = [0]
+
     def hook(svc, event):
         for sid in event["cohort"]:  # cohort members share the slice boundary
             if svc.sessions[sid].step in render_steps[sid]:
@@ -112,8 +125,19 @@ def main(argv=None):
             print(f"  render {r.session_id} req#{r.request_id} "
                   f"snapshot v{r.snapshot_version}@{r.snapshot_step} "
                   f"latency {r.latency_s * 1e3:.0f} ms")
+        quanta[0] += 1
+        if args.metrics_every and quanta[0] % args.metrics_every == 0:
+            print(f"-- metrics @ quantum {quanta[0]} --")
+            print(obs_export.format_metrics(svc.metrics(), prefix="serve3d."))
 
     tel = service.run(hook=hook)
+
+    if args.trace_out:
+        print(f"trace -> {service.dump_trace(args.trace_out)}")
+    if args.metrics_out:
+        obs_export.dump_metrics(args.metrics_out,
+                                extra=service.metrics()["meta"])
+        print(f"metrics -> {args.metrics_out}")
     print("\nper-session progress:")
     for p in tel["sessions"]:
         print(f"  {p['session_id']}: {p['status']} step {p['step']}/{p['target_iters']} "

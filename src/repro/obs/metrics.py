@@ -1,0 +1,178 @@
+"""Typed metrics (Counter / Gauge / Histogram) with a process-global registry.
+
+The registry replaces the loose telemetry scalars that used to live on
+trainer/pipeline/serve3d instances (live_fraction, overflow windows,
+points_queried, dedup ratios, snapshot publishes, render latencies) with one
+named, snapshottable plane:
+
+    from repro.obs import metrics
+    metrics.counter("serve3d.snapshots_published").inc()
+    metrics.gauge("trainer.live_fraction").set(0.17)
+    metrics.histogram("serve3d.render_latency_ms").observe(12.3)
+
+Conventions:
+
+* names are dotted paths, ``subsystem.metric``; per-entity flavors append a
+  ``.{entity}`` suffix (``serve3d.render_latency_ms.scene-000``) so the
+  snapshot stays a flat, sorted, diff-able dict;
+* `Registry.snapshot()` is deterministic: keys sorted, every value a plain
+  JSON scalar/dict — two snapshots of the same state are `==` and
+  `json.dumps` to the same bytes;
+* metric *objects* are always live (they are plain data structures and may
+  back existing service telemetry such as `RenderService.latency_stats`);
+  the ``REPRO_OBS`` knob gates the *instrumentation call sites*, which guard
+  on `trace.enabled()` before touching the global registry.
+
+Histogram quantiles use numpy's default (linear-interpolation) definition
+over a bounded recent window, so ``h.quantile(0.95)`` agrees with
+``np.quantile(window, 0.95)`` exactly — asserted in tests/test_obs.py.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+
+
+class Counter:
+    """Monotone event count."""
+
+    __slots__ = ("value",)
+    kind = "counter"
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+    def snapshot(self):
+        return {"type": self.kind, "value": self.value}
+
+
+class Gauge:
+    """Last-written scalar."""
+
+    __slots__ = ("value",)
+    kind = "gauge"
+
+    def __init__(self):
+        self.value = None
+
+    def set(self, v) -> None:
+        self.value = float(v)
+
+    def snapshot(self):
+        return {"type": self.kind, "value": self.value}
+
+
+class Histogram:
+    """Windowed value distribution with lifetime count/sum.
+
+    Percentiles are computed over the most recent ``window`` observations
+    (bounded memory for long-lived services); count and sum are lifetime.
+    """
+
+    __slots__ = ("window", "count", "total")
+    kind = "histogram"
+
+    def __init__(self, window: int = 4096):
+        self.window = deque(maxlen=int(window))
+        self.count = 0
+        self.total = 0.0
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.window.append(v)
+        self.count += 1
+        self.total += v
+
+    def values(self) -> list[float]:
+        return list(self.window)
+
+    def quantile(self, q: float) -> float | None:
+        """numpy-default (linear) quantile over the recent window."""
+        vals = sorted(self.window)
+        if not vals:
+            return None
+        pos = (len(vals) - 1) * float(q)
+        lo = int(pos)
+        hi = min(lo + 1, len(vals) - 1)
+        frac = pos - lo
+        return vals[lo] * (1.0 - frac) + vals[hi] * frac
+
+    def snapshot(self):
+        return {
+            "type": self.kind,
+            "count": self.count,
+            "sum": self.total,
+            "window": len(self.window),
+            "p50": self.quantile(0.50),
+            "p95": self.quantile(0.95),
+            "p99": self.quantile(0.99),
+            "max": max(self.window) if self.window else None,
+        }
+
+
+class Registry:
+    """Named metric store.  Get-or-create accessors are type-checked: a name
+    keeps its kind for the registry's lifetime."""
+
+    def __init__(self):
+        self._metrics: dict[str, object] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, name: str, cls, *args):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = self._metrics[name] = cls(*args)
+            elif not isinstance(m, cls):
+                raise TypeError(
+                    f"metric {name!r} is a {type(m).kind}, not a {cls.kind}"
+                )
+            return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str, window: int = 4096) -> Histogram:
+        return self._get(name, Histogram, window)
+
+    def get(self, name: str):
+        return self._metrics.get(name)
+
+    def names(self) -> list[str]:
+        with self._lock:
+            return sorted(self._metrics)
+
+    def snapshot(self) -> dict:
+        """Deterministic flat dict: sorted names -> typed JSON-able values."""
+        with self._lock:
+            return {k: self._metrics[k].snapshot() for k in sorted(self._metrics)}
+
+    def reset(self) -> None:
+        with self._lock:
+            self._metrics.clear()
+
+
+#: The process-global registry every instrumentation site records into.
+REGISTRY = Registry()
+
+
+def counter(name: str) -> Counter:
+    return REGISTRY.counter(name)
+
+
+def gauge(name: str) -> Gauge:
+    return REGISTRY.gauge(name)
+
+
+def histogram(name: str, window: int = 4096) -> Histogram:
+    return REGISTRY.histogram(name, window)
+
+
+def snapshot() -> dict:
+    return REGISTRY.snapshot()

@@ -32,8 +32,6 @@ path (which remains the fallback for snapshots without occupancy).
 """
 from __future__ import annotations
 
-import time
-from collections import deque
 from dataclasses import dataclass, field as dc_field
 from typing import Any, NamedTuple
 
@@ -45,6 +43,8 @@ from ..core import rendering
 from ..core.trainer import (
     image_rays, make_redistributed_render_chunk, make_render_chunk,
 )
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from .snapshot import SnapshotStore
 
 # vmapped-over-sessions flavor of the trainer's eval renderer: same
@@ -105,7 +105,7 @@ class RenderRequest:
     request_id: int
     session_id: str
     pose: np.ndarray
-    submitted_at: float = dc_field(default_factory=time.perf_counter)
+    submitted_at: float = dc_field(default_factory=obs_trace.clock)
 
 
 class RenderResult(NamedTuple):
@@ -124,14 +124,23 @@ class RenderService:
         self._geom: dict[str, _SessionGeom] = {}
         self._queue: list[RenderRequest] = []
         self._next_id = 0
-        # per-session serving telemetry; the latency window is bounded so a
-        # long-lived service (jobs accepted continuously) doesn't grow it
-        # per-request forever — percentiles come from the recent window.
-        # (The compile caches are keyed by config/chunk/pow2-group, not by
-        # session, so their size is bounded by config diversity.)
+        # per-session serving telemetry, backed by obs Histograms (bounded
+        # window -> a long-lived service doesn't grow per-request forever;
+        # percentiles come from the recent window, counts are lifetime).
+        # These objects are always live — `latency_stats()` keeps working
+        # with REPRO_OBS off; the knob only gates the *global-registry*
+        # mirror recorded at drain time.  (The compile caches are keyed by
+        # config/chunk/pow2-group, not by session, so their size is bounded
+        # by config diversity.)
         self.latency_window = int(latency_window)
-        self.latencies: dict[str, deque] = {}
+        self.latencies: dict[str, obs_metrics.Histogram] = {}
         self.served: dict[str, int] = {}
+        # TTFUV: register -> first served view, per session.  (bench_serve3d
+        # additionally defines a PSNR-thresholded, GT-based TTFUV; this is
+        # the service-side analogue with "usable" = "first snapshot-backed
+        # render delivered".)
+        self._registered_at: dict[str, float] = {}
+        self.ttfuv_s: dict[str, float] = {}
 
     # ---- registration / submission ----
 
@@ -149,6 +158,7 @@ class RenderService:
             occ_cfg=occ_cfg,
             samples_per_ray=None if samples_per_ray is None else int(samples_per_ray),
         )
+        self._registered_at.setdefault(session_id, obs_trace.clock())
 
     def submit(self, session_id: str, pose: np.ndarray) -> int:
         if session_id not in self._geom:
@@ -167,6 +177,14 @@ class RenderService:
     def drain(self) -> list[RenderResult]:
         """Serve every pending request whose session has a published
         snapshot; requests without one stay queued for the next drain."""
+        with obs_trace.span("serve3d/render_drain", cat="serve3d",
+                            args={"pending": len(self._queue)}):
+            results = self._drain()
+        if obs_trace.enabled():
+            obs_metrics.gauge("serve3d.render.queue_depth").set(len(self._queue))
+        return results
+
+    def _drain(self) -> list[RenderResult]:
         ready: list[tuple[RenderRequest, Any]] = []
         waiting: list[RenderRequest] = []
         for req in self._queue:
@@ -194,6 +212,16 @@ class RenderService:
 
     def _render_group(self, field_cfg, render_cfg, h, w, focal, eval_chunk,
                       occ_cfg, samples_per_ray, items) -> list[RenderResult]:
+        with obs_trace.span("serve3d/render_group", cat="serve3d",
+                            args={"group": len(items),
+                                  "redistribute": samples_per_ray is not None}):
+            return self._render_group_inner(
+                field_cfg, render_cfg, h, w, focal, eval_chunk,
+                occ_cfg, samples_per_ray, items)
+
+    def _render_group_inner(self, field_cfg, render_cfg, h, w, focal,
+                            eval_chunk, occ_cfg, samples_per_ray,
+                            items) -> list[RenderResult]:
         g_real = len(items)
         g_pad = _pow2_bucket(g_real)
         padded = items + [items[-1]] * (g_pad - g_real)
@@ -234,13 +262,27 @@ class RenderService:
         rgb = np.asarray(jnp.concatenate(rgb_chunks, axis=1))[:, :n]
         dep = np.asarray(jnp.concatenate(dep_chunks, axis=1))[:, :n]
 
-        now = time.perf_counter()
+        now = obs_trace.clock()
+        obs_on = obs_trace.enabled()
         out = []
         for gi, (req, snap) in enumerate(items):
             lat = now - req.submitted_at
-            self.latencies.setdefault(
-                req.session_id, deque(maxlen=self.latency_window)).append(lat)
-            self.served[req.session_id] = self.served.get(req.session_id, 0) + 1
+            sid = req.session_id
+            hist = self.latencies.get(sid)
+            if hist is None:
+                hist = self.latencies[sid] = obs_metrics.Histogram(
+                    window=self.latency_window)
+            hist.observe(lat)
+            first = sid not in self.ttfuv_s
+            if first and sid in self._registered_at:
+                self.ttfuv_s[sid] = now - self._registered_at[sid]
+            self.served[sid] = self.served.get(sid, 0) + 1
+            if obs_on:
+                obs_metrics.counter("serve3d.render.served").inc()
+                obs_metrics.histogram("serve3d.render.latency_ms").observe(lat * 1e3)
+                if first and sid in self.ttfuv_s:
+                    obs_metrics.gauge(f"serve3d.render.ttfuv_s.{sid}").set(
+                        self.ttfuv_s[sid])
             out.append(RenderResult(
                 request_id=req.request_id,
                 session_id=req.session_id,
@@ -255,15 +297,23 @@ class RenderService:
     # ---- telemetry ----
 
     def latency_stats(self) -> dict:
-        """Percentiles over the recent latency window; counts are lifetime."""
-        all_lat = sorted(l for ls in self.latencies.values() for l in ls)
-        if not all_lat:
+        """Percentiles over the recent latency window; counts are lifetime.
+
+        Quantiles use the obs Histogram definition (numpy linear
+        interpolation) over the union of the per-session windows."""
+        merged = obs_metrics.Histogram(
+            window=self.latency_window * max(1, len(self.latencies)))
+        for h in self.latencies.values():
+            for v in h.values():
+                merged.observe(v)
+        if merged.count == 0:
             return {"count": 0}
-        pct = lambda p: all_lat[min(len(all_lat) - 1, int(p * len(all_lat)))]
         return {
             "count": sum(self.served.values()),
-            "p50_ms": pct(0.50) * 1e3,
-            "p95_ms": pct(0.95) * 1e3,
-            "max_ms": all_lat[-1] * 1e3,
+            "p50_ms": merged.quantile(0.50) * 1e3,
+            "p95_ms": merged.quantile(0.95) * 1e3,
+            "p99_ms": merged.quantile(0.99) * 1e3,
+            "max_ms": max(merged.values()) * 1e3,
             "per_session": dict(self.served),
+            "ttfuv_s": dict(self.ttfuv_s),
         }

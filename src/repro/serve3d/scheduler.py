@@ -35,6 +35,8 @@ quanta but takes longer than the urgent session's solo slice.
 """
 from __future__ import annotations
 
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from .session import ACTIVE, DONE, PENDING, SUSPENDED, SceneSession
 
 
@@ -151,6 +153,8 @@ class SessionScheduler:
             self.last_trained = []
             return None
         cohort = self.cohort_for(primary)
+        if obs_trace.enabled():
+            obs_metrics.gauge("serve3d.cohort_size").set(len(cohort))
         if len(cohort) == 1:
             primary.run_slice(self.slice_iters)
         else:

@@ -22,8 +22,9 @@ instead of dense.
 """
 from __future__ import annotations
 
-import time
-
+from ..obs import export as obs_export
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from .render import RenderService
 from .scheduler import SessionScheduler
 from .session import DONE, SceneSession
@@ -121,15 +122,21 @@ class ReconstructionService:
         """One quantum: train one cohort slice, publish each advanced
         session, drain renders."""
         if self._started_at is None:
-            self._started_at = time.perf_counter()
-        sess = self.scheduler.step()
-        for member in self.scheduler.last_trained:
-            slices = len(member.telemetry["step"])
-            # a finished session may already be suspended (bounded residency)
-            # — publish still works from its host tree
-            if member.status == DONE or slices % self.snapshot_every == 0:
-                member.publish(self.store)
-        results = self.renderer.drain()
+            self._started_at = obs_trace.clock()
+        with obs_trace.span("serve3d/quantum", cat="serve3d",
+                            args={"pending_renders": self.renderer.pending}):
+            sess = self.scheduler.step()
+            for member in self.scheduler.last_trained:
+                slices = len(member.telemetry["step"])
+                # a finished session may already be suspended (bounded
+                # residency) — publish still works from its host tree
+                if member.status == DONE or slices % self.snapshot_every == 0:
+                    member.publish(self.store)
+            results = self.renderer.drain()
+        if obs_trace.enabled():
+            obs_metrics.counter("serve3d.quanta").inc()
+            obs_metrics.gauge("serve3d.sessions_active").set(sum(
+                1 for s in self.sessions.values() if s.status != DONE))
         return {
             "trained": sess.session_id if sess is not None else None,
             "cohort": [m.session_id for m in self.scheduler.last_trained],
@@ -159,7 +166,7 @@ class ReconstructionService:
 
     def telemetry(self) -> dict:
         done = [s for s in self.sessions.values() if s.status == DONE]
-        now = time.perf_counter()
+        now = obs_trace.clock()
         wall = now - (self._started_at if self._started_at is not None else now)
         return {
             "wall_s": wall,
@@ -168,3 +175,21 @@ class ReconstructionService:
             "sessions": self.progress(),
             "render": self.renderer.latency_stats(),
         }
+
+    def metrics(self) -> dict:
+        """The service's exportable metrics document: the global obs
+        registry snapshot (trainer/pipeline/serve3d counters and histograms,
+        populated when ``REPRO_OBS`` is on) under ``metrics``, plus the
+        always-on service plane (per-session progress, published snapshot
+        versions, render latency percentiles and per-session TTFUV) under
+        ``meta.service`` — same shape `repro.obs.export.dump_metrics`
+        writes and `format_metrics` renders."""
+        return obs_export.metrics_snapshot(extra={"service": {
+            "telemetry": self.telemetry(),
+            "snapshots": {sid: self.store.latest(sid).version
+                          for sid in self.store.sessions()},
+        }})
+
+    def dump_trace(self, path: str) -> str:
+        """Write the span buffer as Chrome-trace JSON (Perfetto-loadable)."""
+        return obs_export.dump_trace(path, process_name="repro.serve3d")

@@ -23,7 +23,6 @@ checkpoint (the fresh-process path).
 """
 from __future__ import annotations
 
-import time
 from typing import Any
 
 import jax
@@ -34,6 +33,7 @@ from ..checkpoint import CheckpointManager
 from ..core import field as field_lib
 from ..core.trainer import Instant3DTrainer, TrainerConfig, TrainState, train_cohort
 from ..data import RaySampler
+from ..obs import trace as obs_trace
 
 PENDING = "pending"
 ACTIVE = "active"
@@ -68,7 +68,7 @@ class SceneSession:
         self.state: TrainState | None = None
         self._host_tree: dict | None = None
         self.status = PENDING
-        self.submitted_at = time.perf_counter()
+        self.submitted_at = obs_trace.clock()
         self.train_wall_s = 0.0
         self.telemetry: dict[str, list] = {"step": [], "loss": [], "live_fraction": []}
 
@@ -103,11 +103,14 @@ class SceneSession:
         if n <= 0:
             self.status = DONE
             return {}
-        t0 = time.perf_counter()
-        self.state, hist = self.trainer.train(
-            self.state, self.sampler, iters=n, log_every=n
-        )
-        self._record_slice(hist, time.perf_counter() - t0)
+        t0 = obs_trace.clock()
+        with obs_trace.span("serve3d/slice", cat="serve3d",
+                            args={"session": self.session_id, "iters": n,
+                                  "step": int(self.step)}):
+            self.state, hist = self.trainer.train(
+                self.state, self.sampler, iters=n, log_every=n
+            )
+        self._record_slice(hist, obs_trace.clock() - t0)
         return hist
 
     def _record_slice(self, hist: dict, wall_s: float):
@@ -149,14 +152,17 @@ class SceneSession:
                 if s.done:
                     s.status = DONE
             return 0
-        t0 = time.perf_counter()
-        states, hists = train_cohort(
-            [s.trainer for s in sessions],
-            [s.state for s in sessions],
-            [s.sampler for s in sessions],
-            iters=n, log_every=n,
-        )
-        dt = (time.perf_counter() - t0) / len(sessions)
+        t0 = obs_trace.clock()
+        with obs_trace.span("serve3d/slice", cat="serve3d",
+                            args={"cohort": len(sessions), "iters": n,
+                                  "step": int(sessions[0].step)}):
+            states, hists = train_cohort(
+                [s.trainer for s in sessions],
+                [s.state for s in sessions],
+                [s.sampler for s in sessions],
+                iters=n, log_every=n,
+            )
+        dt = (obs_trace.clock() - t0) / len(sessions)
         for s, st, hist in zip(sessions, states, hists):
             s.state = st
             s._record_slice(hist, dt)

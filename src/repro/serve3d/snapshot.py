@@ -21,6 +21,8 @@ import jax
 import numpy as np
 
 from ..checkpoint import CheckpointManager
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 
 
 class Snapshot(NamedTuple):
@@ -48,6 +50,12 @@ class SnapshotStore:
                 occ=None) -> Snapshot:
         """Copy params (+ occupancy) to host and atomically make them the
         session's latest."""
+        with obs_trace.span("serve3d/snapshot_publish", cat="serve3d",
+                            args={"session": session_id, "step": int(step)}):
+            return self._publish(session_id, params, step, meta, occ)
+
+    def _publish(self, session_id: str, params, step: int, meta: dict | None,
+                 occ) -> Snapshot:
         host = jax.device_get(params)
         host_occ = None if occ is None else (
             jax.device_get(occ[0]), int(occ[1])
@@ -63,6 +71,8 @@ class SnapshotStore:
                 occ=host_occ,
             )
             self._latest[session_id] = snap
+        if obs_trace.enabled():
+            obs_metrics.counter("serve3d.snapshots_published").inc()
         if self.persist_dir is not None:
             ckpt = self._ckpts.get(session_id)
             if ckpt is None:

@@ -91,6 +91,13 @@ SPECS: dict[str, list[Rule]] = {
         # trajectory-compare against a smoke baseline
         Rule("psnr_rgb_delta_equal_points", min=0.3, full_only=True, abs_tol=0.5),
     ],
+    "BENCH_obs_overhead.json": [
+        # the REPRO_OBS=off no-op span path must stay under 1% of a
+        # training step — the contract that keeps instrumentation resident
+        # on the hot paths (micro-timings are noisy; the absolute cap is
+        # the promise, so no trajectory tolerance)
+        Rule("overhead_fraction", max=0.01),
+    ],
     "BENCH_serve3d.json": [
         Rule("parity.max_abs_diff_db", max=0.1),
         Rule("cohort.bit_identical", flag=True),

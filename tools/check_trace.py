@@ -1,0 +1,127 @@
+#!/usr/bin/env python
+"""Validate a Chrome-trace JSON file produced by repro.obs.export.
+
+Checks the Trace Event Format contract that chrome://tracing and Perfetto
+rely on — CI runs this over the traces the obs leg records so a malformed
+exporter can never ship behind a green build:
+
+* top level: ``{"traceEvents": [...]}`` (displayTimeUnit optional);
+* every event has ``name``/``ph``/``pid``/``tid``/``ts``; complete events
+  (``ph == "X"``) carry a non-negative ``dur``; instants (``ph == "i"``)
+  carry a scope ``s``; metadata (``ph == "M"``) names the process and every
+  thread that emitted an event;
+* timestamps are finite numbers (µs), args JSON-serializable dicts.
+
+``--require name`` (repeatable) additionally asserts that a span with that
+name is present — the CI legs use it to pin the span taxonomy (pipeline
+stages, trainer step compile/execute split, serve3d quanta).
+
+    python tools/check_trace.py trace.json --require pipeline/shade \
+        --require trainer/step
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+KNOWN_PHASES = {"X", "i", "I", "M", "B", "E", "b", "e", "n", "C"}
+
+
+def check(doc, require=(), label="trace") -> list[str]:
+    """Returns a list of problems (empty == valid)."""
+    problems = []
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return [f"{label}: top level must be a dict with 'traceEvents'"]
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        return [f"{label}: traceEvents must be a list"]
+
+    names = set()
+    spans = 0
+    tids_seen = set()
+    tids_named = set()
+    process_named = False
+    for i, e in enumerate(events):
+        where = f"{label}: event[{i}]"
+        if not isinstance(e, dict):
+            problems.append(f"{where} is not an object")
+            continue
+        for field in ("name", "ph", "pid", "tid", "ts"):
+            if field not in e:
+                problems.append(f"{where} missing {field!r}")
+        ph = e.get("ph")
+        if ph not in KNOWN_PHASES:
+            problems.append(f"{where} unknown phase {ph!r}")
+        for field in ("ts", "dur"):
+            v = e.get(field)
+            if v is not None and (not isinstance(v, (int, float))
+                                  or isinstance(v, bool)
+                                  or not math.isfinite(v)):
+                problems.append(f"{where} {field}={v!r} is not a finite number")
+        if ph == "X":
+            spans += 1
+            names.add(e.get("name"))
+            tids_seen.add(e.get("tid"))
+            if "dur" not in e:
+                problems.append(f"{where} complete event missing 'dur'")
+            elif isinstance(e["dur"], (int, float)) and e["dur"] < 0:
+                problems.append(f"{where} negative dur {e['dur']}")
+        elif ph == "i":
+            names.add(e.get("name"))
+            tids_seen.add(e.get("tid"))
+            if "s" not in e:
+                problems.append(f"{where} instant event missing scope 's'")
+        elif ph == "M":
+            if e.get("name") == "process_name":
+                process_named = True
+            elif e.get("name") == "thread_name":
+                tids_named.add(e.get("tid"))
+        if "args" in e and not isinstance(e["args"], dict):
+            problems.append(f"{where} args is not an object")
+
+    if events and not process_named:
+        problems.append(f"{label}: no process_name metadata event")
+    unnamed = tids_seen - tids_named
+    if unnamed:
+        problems.append(f"{label}: threads without thread_name metadata: "
+                        f"{sorted(unnamed)}")
+    for name in require:
+        if name not in names:
+            problems.append(f"{label}: required span {name!r} absent "
+                            f"(have {len(names)} distinct names)")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="+", help="trace JSON files to validate")
+    ap.add_argument("--require", action="append", default=[],
+                    help="span name that must be present (repeatable)")
+    args = ap.parse_args(argv)
+
+    failures = []
+    for path in args.paths:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            failures.append(f"{path}: unreadable ({e})")
+            continue
+        probs = check(doc, require=args.require, label=path)
+        n = len(doc.get("traceEvents", [])) if isinstance(doc, dict) else 0
+        if probs:
+            failures += probs
+            print(f"[FAIL] {path}: {len(probs)} problem(s) in {n} events")
+            for p in probs[:20]:
+                print(f"       {p}")
+        else:
+            spans = sum(1 for e in doc["traceEvents"]
+                        if isinstance(e, dict) and e.get("ph") == "X")
+            print(f"[ok]   {path}: {n} events, {spans} spans")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
