@@ -1,0 +1,180 @@
+"""Chaos benchmark -> BENCH_robustness.json.
+
+Runs the serve3d service twice over the same scene set with live render
+traffic: once under injected faults (a NaN-params slice, a snapshot publish
+failure, a straggler slice — `repro.testing.faults`) with overload shedding
+armed, and once fault-free as the control.  Records the recovery contract:
+
+* every session finishes despite the faults, with >= 1 guard rollback,
+* uninjected sessions end *bit-identical* to the control run (0.0 dB PSNR
+  parity — a fault in one cohort member never perturbs survivors),
+* the injected session also re-converges bit-identically (rollback +
+  absolute-step-keyed retraining reproduces the fault-free stream),
+* recovery latency p50/p95 (divergence detected -> last-good restored),
+* degradation telemetry: publish retries, shed fraction, stragglers.
+
+    PYTHONPATH=src python -m benchmarks.bench_robustness [--smoke]
+
+CI's chaos-smoke leg runs this with --smoke and gates the artifact via
+tools/bench_gate.py.  Steady-state guard *overhead* is measured in
+bench_serve3d (its fault-free headline run), not here.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.core import FieldConfig, TrainerConfig, occupancy
+from repro.core.rendering import RenderConfig
+from repro.data import build_dataset
+from repro.serve3d import DONE, ReconstructionService
+from repro.testing import faults
+
+from . import common
+
+INJECTED = "scene-001"           # takes the NaN slice (the divergence fault)
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+def run(smoke: bool = False):
+    scenes = 4
+    iters = 16 if smoke else 48
+    slice_iters = 4
+    hw = 24
+    views = 2 if smoke else 3
+
+    field_cfg = FieldConfig(n_levels=4, max_resolution=64,
+                            log2_table_density=12, log2_table_color=10)
+    occ_cfg = occupancy.OccupancyConfig(update_interval=8, warmup_steps=8)
+    render = RenderConfig(n_samples=8)
+    trainer_cfg = TrainerConfig(n_rays=128, render=render, occ=occ_cfg,
+                                eval_chunk=hw * hw)
+
+    datasets = {}
+    for i in range(scenes):
+        _scene, ds = build_dataset(seed=i, n_views=views, h=hw, w=hw,
+                                   cfg=render, gt_samples=48)
+        datasets[f"scene-{i:03d}"] = ds
+
+    def make_service() -> ReconstructionService:
+        # shed_threshold below the per-quantum request count so the chaos
+        # run exercises the quality-shedding rung of the degradation ladder
+        svc = ReconstructionService(slice_iters=slice_iters,
+                                    shed_threshold=scenes - 1,
+                                    render_deadline_s=60.0)
+        for i, (sid, ds) in enumerate(datasets.items()):
+            svc.submit_scene(ds, field_cfg, trainer_cfg,
+                             target_iters=iters, seed=i, session_id=sid)
+        return svc
+
+    def hook(svc, event):
+        for sid in event["cohort"]:   # one render per advanced session
+            svc.request_render(sid, datasets[sid].poses[0])
+
+    # ---- chaos run ----
+    faults.reset()
+    faults.configure(enabled=True)
+    faults.inject("serve3d.slice", "nan_params", session=INJECTED,
+                  at_step=iters // 2)
+    faults.inject("serve3d.snapshot_publish", "snapshot_fail",
+                  session="scene-002", at_step=iters // 4)
+    faults.inject("serve3d.slice", "slow", session="scene-003",
+                  at_step=iters // 2, seconds=0.5)
+    svc_f = make_service()
+    tel_f = svc_f.run(hook=hook)
+    fired = {k: faults.fired_count(k)
+             for k in ("nan_params", "snapshot_fail", "slow")}
+    faults.reset()
+    faults.configure(enabled=False)
+
+    # ---- fault-free control over the same scenes ----
+    svc_c = make_service()
+    svc_c.run(hook=hook)
+
+    all_done = all(s.status == DONE for s in svc_f.sessions.values())
+    bit_identical = {
+        sid: bool(_leaves_equal(svc_f.sessions[sid]._current_params(),
+                                svc_c.sessions[sid]._current_params()))
+        for sid in datasets
+    }
+    uninjected = [sid for sid in datasets if sid != INJECTED]
+    # PSNR parity over uninjected sessions: bit-identical params render
+    # bit-identical pixels, so this is exactly 0.0 when recovery held
+    parity_db = max(
+        abs(svc_f.sessions[sid].evaluate(views=[0])["psnr_rgb"]
+            - svc_c.sessions[sid].evaluate(views=[0])["psnr_rgb"])
+        for sid in uninjected
+    )
+
+    guard = tel_f["guard"]
+    degraded = svc_f.renderer.latency_stats().get("degraded", {})
+    out = {
+        "config": {
+            "smoke": smoke, "scenes": scenes, "iters_per_scene": iters,
+            "slice_iters": slice_iters, "hw": hw, "views": views,
+            "injected_session": INJECTED,
+            "faults": ["nan_params", "snapshot_fail", "slow"],
+        },
+        "faults_fired": fired,
+        "all_sessions_done": bool(all_done),
+        "rollbacks": guard["rollbacks"],
+        "quarantined": guard["quarantined"],
+        "divergences": guard["divergences"],
+        "recovery_ms": guard["recovery_ms"],
+        "uninjected_parity_db": float(parity_db),
+        "uninjected_bit_identical": bool(all(bit_identical[s]
+                                             for s in uninjected)),
+        "injected_bit_identical": bit_identical[INJECTED],
+        "bit_identical": bit_identical,
+        "publish_failures": svc_f.publish_failures,
+        "stragglers_flagged": tel_f["stragglers_flagged"],
+        "render": {
+            "served": tel_f["render"].get("count", 0),
+            "expired": degraded.get("expired", 0),
+            "failed": degraded.get("failed", 0),
+            "shed_fraction": degraded.get("shed_fraction", 0.0),
+        },
+    }
+    with open("BENCH_robustness.json", "w") as f:
+        json.dump(out, f, indent=2)
+
+    common.emit(
+        "serve3d_chaos",
+        float(guard["recovery_ms"]["p95"] or 0.0) * 1e3,  # ms -> us
+        f"rollbacks={guard['rollbacks']};"
+        f"recovery_p50_ms={guard['recovery_ms']['p50']};"
+        f"parity_db={parity_db:.4f};"
+        f"shed_fraction={out['render']['shed_fraction']:.3f};"
+        f"publish_failures={svc_f.publish_failures}",
+    )
+
+    assert fired["nan_params"] == 1 and fired["snapshot_fail"] == 1, fired
+    assert all_done, "a session failed to finish under injected faults"
+    assert guard["rollbacks"] >= 1, "NaN slice produced no rollback"
+    assert out["uninjected_bit_identical"], (
+        "an uninjected session diverged from the fault-free run")
+    assert parity_db == 0.0, (
+        f"uninjected PSNR parity {parity_db} dB != 0.0")
+    assert svc_f.publish_failures >= 1, "publish fault did not register"
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="4 sessions x 16 iters chaos run (CI chaos-smoke leg)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

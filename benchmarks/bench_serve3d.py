@@ -117,6 +117,15 @@ def run(smoke: bool = False):
 
     tel = service.run(hook=hook)
 
+    # ---- steady-state guard overhead (faults off) ----
+    # the divergence guard is on by default, so the headline run already
+    # paid for every inspect (loss checks, jitted finiteness reductions,
+    # periodic last-good host snapshots); its share of training wall time
+    # is the overhead a fault-free service pays for fault tolerance
+    train_wall = sum(s.train_wall_s for s in service.sessions.values())
+    g = tel["guard"]
+    guard_overhead = (g["inspect_wall_s"] / train_wall) if train_wall else 0.0
+
     # ---- parity + bit-identity vs sequential single-scene training ----
 
     psnr_interleaved, psnr_sequential = {}, {}
@@ -223,6 +232,13 @@ def run(smoke: bool = False):
             "psnr_redistributed_db": redist_psnr,
             "psnr_cost_db": psnr_cost,
         },
+        "guard": {
+            "overhead_frac": guard_overhead,
+            "inspect_wall_s": g["inspect_wall_s"],
+            "train_wall_s": train_wall,
+            "checkpoints": g["checkpoints"],
+            "rollbacks": g["rollbacks"],
+        },
     }
     with open("BENCH_serve3d.json", "w") as f:
         json.dump(out, f, indent=2)
@@ -245,6 +261,12 @@ def run(smoke: bool = False):
         redist_p50 * 1e3,
         f"p50_ratio={p50_ratio:.3f};psnr_cost_db={psnr_cost:.3f};spr={spr}",
     )
+    common.emit(
+        "serve3d_guard_overhead",
+        guard_overhead * 1e6,  # fraction in micro-units for the CSV column
+        f"overhead_frac={guard_overhead:.5f};checkpoints={g['checkpoints']};"
+        f"rollbacks={g['rollbacks']}",
+    )
     for sid, t in ttfuv.items():
         common.emit(f"serve3d_ttfuv[{sid}]", (t or 0.0) * 1e6,
                     f"ttfuv_s={'%.2f' % t if t is not None else 'n/a'};"
@@ -255,6 +277,11 @@ def run(smoke: bool = False):
         "cohort-batched training diverged from sequential time-slicing")
     assert psnr_cost <= 0.1, (
         f"redistributed render path costs {psnr_cost:.3f} dB (> 0.1)")
+    assert g["rollbacks"] == 0, (
+        f"guard rolled back {g['rollbacks']}x in a fault-free run "
+        "(divergence heuristic misfiring)")
+    assert guard_overhead <= 0.01, (
+        f"steady-state guard overhead {guard_overhead:.4f} > 1%")
     return out
 
 

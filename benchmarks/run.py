@@ -28,6 +28,7 @@ SUITES = [
     ("fused_path_kernel", "bench_fused_path", "BENCH_fused_path.json"),
     ("adaptive_sampler", "bench_sampler", "BENCH_sampler.json"),
     ("serve3d_service", "bench_serve3d", "BENCH_serve3d.json"),
+    ("serve3d_robustness", "bench_robustness", "BENCH_robustness.json"),
     ("fig8_10_access_patterns", "bench_access_patterns", None),
     ("fig16_18_kernels", "bench_kernels", None),
 ]

@@ -2,11 +2,19 @@
 
 Layout:  <dir>/step_{N:08d}/{arrays.npz, meta.json}
 Commit protocol: write into `tmp_step_N`, fsync, rename — a crash mid-save
-never corrupts the latest checkpoint.  `meta.json` stores a content hash so a
-torn read is detected at restore.  Arrays are stored as plain numpy keyed by
+never corrupts the latest checkpoint.  `meta.json` stores a per-file sha256
+map (``files``) computed at save and verified at load; a corrupt or torn
+checkpoint is rejected and `restore` falls back to the previous valid step
+instead of loading bad bytes.  Arrays are stored as plain numpy keyed by
 tree path, so a checkpoint written on one mesh restores onto any other mesh
 (re-sharding happens at `device_put` with the new sharding) — this is the
 elastic-scaling path: 256-chip checkpoints resume on 128 or 512 chips.
+
+Fault sites (``repro.testing.faults``, site ``checkpoint.write``):
+``kill_mid_write`` raises after the array file lands but before the atomic
+rename — the torn tmp dir must never shadow the previous checkpoint;
+``corrupt`` flips bytes in the committed array file after the checksum was
+taken — the per-file verification must reject it at restore.
 """
 from __future__ import annotations
 
@@ -20,6 +28,12 @@ from typing import Any
 
 import jax
 import numpy as np
+
+from ..testing import faults
+
+
+def _file_digest(path: Path) -> str:
+    return hashlib.sha256(path.read_bytes()).hexdigest()
 
 
 def _path_key(path) -> str:
@@ -83,9 +97,24 @@ class CheckpointManager:
         with open(npz_path, "wb") as f:
             np.savez(f, **flat)
             f.flush()
-        digest = hashlib.sha256(npz_path.read_bytes()).hexdigest()
-        meta = {"step": step, "time": time.time(), "sha256": digest, **extra}
+        # per-file checksum map, written at save and verified at restore; the
+        # legacy top-level "sha256" is kept so old readers keep working
+        files = {"arrays.npz": _file_digest(npz_path)}
+        meta = {"step": step, "time": time.time(),
+                "sha256": files["arrays.npz"], "files": files, **extra}
         (tmp / "meta.json").write_text(json.dumps(meta, indent=2))
+        inj = faults.check("checkpoint.write", step=int(step))
+        if inj is not None:
+            if inj.kind == "kill_mid_write":
+                # simulated crash between data write and atomic rename: the
+                # torn tmp dir stays behind, the previous checkpoint stays
+                # the latest valid one
+                raise faults.InjectedFault(f"kill_mid_write at step {step}")
+            if inj.kind == "corrupt":
+                # bit-rot after the checksum was taken: the commit succeeds
+                # but per-file verification must reject it at restore
+                faults.corrupt_file(npz_path,
+                                    n_bytes=int(inj.params.get("n_bytes", 64)))
         if final.exists():
             shutil.rmtree(final)
         tmp.rename(final)  # atomic commit
@@ -108,11 +137,16 @@ class CheckpointManager:
         return steps[-1] if steps else None
 
     def _verify(self, step: int) -> bool:
+        """Checksum-verify every file the checkpoint's meta lists.  Any
+        missing/unparseable/mismatching file rejects the whole step —
+        `restore` then falls back to the previous valid one."""
         d = self.dir / f"step_{step:08d}"
         try:
             meta = json.loads((d / "meta.json").read_text())
-            digest = hashlib.sha256((d / "arrays.npz").read_bytes()).hexdigest()
-            return digest == meta["sha256"]
+            # legacy checkpoints (pre per-file map) carry one top-level hash
+            files = meta.get("files") or {"arrays.npz": meta["sha256"]}
+            return all(_file_digest(d / name) == want
+                       for name, want in files.items())
         except Exception:
             return False
 

@@ -190,6 +190,30 @@ class TrainerConfig:
     max_budget: int | None = None
 
 
+@jax.jit
+def _finite_reduce(trees) -> jax.Array:
+    acc = jnp.bool_(True)
+    for leaf in jax.tree_util.tree_leaves(trees):
+        x = jnp.asarray(leaf)
+        if jnp.issubdtype(x.dtype, jnp.inexact):
+            acc = acc & jnp.all(jnp.isfinite(x))
+    return acc
+
+
+def tree_all_finite(*trees) -> bool:
+    """True iff every inexact leaf of every tree is finite (no NaN/Inf).
+
+    The serve3d divergence guard's deep check: params, optimizer moments and
+    the occupancy EMA are reduced to one host bool per call.  Integer leaves
+    (opt step counts, occupancy fold counts) are skipped — finiteness is a
+    float question.  The reduction is jitted (cached per tree structure, so
+    per-slice cost is one dispatch + one scalar sync, the ≤ 1% guard-overhead
+    budget) but runs strictly *outside* the training step's compiled path,
+    so enabling the guard can never perturb traced training code."""
+    acc = _finite_reduce(tuple(trees))
+    return bool(acc)
+
+
 def _branch_update(i: int, freq: float) -> bool:
     """Whether branch with frequency `freq` updates at iteration i (0-based)."""
     if freq >= 1.0:

@@ -10,8 +10,11 @@ advances together per quantum (bit-identical to time-slicing — disable with
 bounded resident set using the continuous-batching slot-reset idiom.
 Batched novel-view render requests are served mid-training from atomically
 published snapshots through the redistributed render path (--dense-render
-for the dense fallback).  Prints per-session progress plus aggregate
-scenes/sec and render-latency percentiles.
+for the dense fallback).  A session guard (on by default — docs/ROBUSTNESS.md)
+rolls diverged slices back to the last good checkpoint and quarantines
+repeat offenders; --chaos demos it by injecting a NaN fault mid-run.
+Prints per-session progress plus aggregate scenes/sec, render-latency
+percentiles, and guard telemetry.
 """
 from __future__ import annotations
 
@@ -25,7 +28,8 @@ from ..core.rendering import RenderConfig, sphere_poses
 from ..data import build_dataset
 from ..obs import export as obs_export
 from ..obs import trace as obs_trace
-from ..serve3d import ReconstructionService
+from ..serve3d import GuardConfig, ReconstructionService
+from ..testing import faults
 
 
 def build_service(args) -> tuple[ReconstructionService, dict]:
@@ -39,6 +43,9 @@ def build_service(args) -> tuple[ReconstructionService, dict]:
         occ=occupancy.OccupancyConfig(update_interval=8, warmup_steps=16),
         eval_chunk=args.hw * args.hw,
     )
+    guard = (GuardConfig(checkpoint_every=args.guard_ckpt_every,
+                         max_retries=args.guard_max_retries)
+             if not args.no_guard else None)
     service = ReconstructionService(
         slice_iters=args.slice,
         policy=args.policy,
@@ -47,6 +54,9 @@ def build_service(args) -> tuple[ReconstructionService, dict]:
         max_cohort=args.max_cohort,
         redistributed_render=not args.dense_render,
         render_samples_per_ray=args.render_spr,
+        guard=guard,
+        render_deadline_s=args.render_deadline,
+        shed_threshold=args.shed_threshold,
     )
     datasets = {}
     for i in range(args.scenes):
@@ -89,6 +99,21 @@ def main(argv=None):
     ap.add_argument("--gt-samples", type=int, default=48)
     ap.add_argument("--persist-dir", default=None,
                     help="persist published snapshots (atomic per-session checkpoints)")
+    ap.add_argument("--no-guard", action="store_true",
+                    help="disable the session guard (slice errors unwind the run)")
+    ap.add_argument("--guard-ckpt-every", type=int, default=4,
+                    help="guard last-good checkpoint cadence, in healthy slices")
+    ap.add_argument("--guard-max-retries", type=int, default=3,
+                    help="consecutive rollbacks before a session is quarantined")
+    ap.add_argument("--render-deadline", type=float, default=None,
+                    help="per-request render deadline in seconds (expired "
+                         "requests return a typed error instead of hanging)")
+    ap.add_argument("--shed-threshold", type=int, default=None,
+                    help="ready-request queue depth that triggers quality "
+                         "shedding (halved samples per ray) before drops")
+    ap.add_argument("--chaos", action="store_true",
+                    help="demo fault injection: poison scene-001's params "
+                         "with NaN mid-run and watch the guard roll it back")
     ap.add_argument("--backend", default=None)
     ap.add_argument("--trace-out", default=None,
                     help="write a Chrome-trace JSON of the run (enables obs)")
@@ -103,6 +128,15 @@ def main(argv=None):
 
     be = kernels.set_backend(args.backend) if args.backend else kernels.get_backend()
     print(f"kernel backend: {be.name}")
+
+    if args.chaos:
+        if args.scenes < 2:
+            raise SystemExit("--chaos needs at least 2 scenes")
+        faults.configure(enabled=True)
+        faults.inject("serve3d.slice", "nan_params", session="scene-001",
+                      at_step=args.iters // 2, times=1)
+        print("chaos: NaN-params fault armed for scene-001 "
+              f"at step {args.iters // 2}")
 
     service, datasets = build_service(args)
     novel = sphere_poses(max(8, args.renders_per_scene), seed=123)
@@ -145,6 +179,21 @@ def main(argv=None):
     r = tel["render"]
     print(f"\nscenes/sec {tel['scenes_per_sec']:.3f}  renders {r.get('count', 0)}  "
           f"p50 {r.get('p50_ms', float('nan')):.0f} ms  p95 {r.get('p95_ms', float('nan')):.0f} ms")
+    g = tel.get("guard")
+    if g is not None:
+        print(f"guard: rollbacks {g['rollbacks']}  "
+              f"quarantined {g['quarantined'] or 'none'}  "
+              f"checkpoints {g['checkpoints']}  "
+              f"publish retries {tel['publish_failures']}  "
+              f"stragglers {tel['stragglers_flagged']}")
+        if g["recovery_ms"]["count"]:
+            print(f"guard recovery p50 {g['recovery_ms']['p50']:.1f} ms "
+                  f"(n={g['recovery_ms']['count']})")
+    if args.chaos:
+        fired = faults.fired_count("nan_params")
+        print(f"chaos: nan_params fired {fired}x, "
+              f"guard rollbacks {g['rollbacks'] if g else 0}")
+        faults.reset()
     return tel
 
 

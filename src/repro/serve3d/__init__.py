@@ -1,12 +1,16 @@
 """serve3d — multi-scene reconstruction service (Instant-3D as a service
 primitive: accept scene jobs, time-slice the device across concurrent
 training sessions, serve batched novel-view renders from published
-snapshots while training continues)."""
-from .session import SceneSession, PENDING, ACTIVE, SUSPENDED, DONE  # noqa: F401
+snapshots while training continues, and survive divergence/crash faults
+via guard rollback and graceful render degradation)."""
+from .session import (  # noqa: F401
+    SceneSession, PENDING, ACTIVE, SUSPENDED, DONE, QUARANTINED,
+)
 from .scheduler import SessionScheduler  # noqa: F401
 from .snapshot import Snapshot, SnapshotStore  # noqa: F401
 from .render import (  # noqa: F401
-    RenderRequest, RenderResult, RenderService,
+    RenderError, RenderRequest, RenderResult, RenderService,
     batched_render_fn, batched_redistributed_render_fn,
 )
+from .guard import GuardConfig, SessionGuard  # noqa: F401
 from .service import ReconstructionService  # noqa: F401

@@ -29,6 +29,24 @@ latency drops with the shaded point count; and because a redistributing
 trainer marches the same quadrature, served views stop paying the
 train/eval quadrature mismatch.  ``samples_per_ray=None`` keeps the dense
 path (which remains the fallback for snapshots without occupancy).
+
+Degradation ladder (the fault-tolerance surface; see docs/ROBUSTNESS.md):
+
+* **deadlines** — a request may carry ``deadline_s`` (or inherit
+  ``default_deadline_s``); a request still queued past its deadline is
+  answered with a typed `RenderError("deadline_expired")` at the next
+  drain, never silently dropped and never left to hang.
+* **overload shedding** — when the queue exceeds ``shed_threshold``, the
+  drain halves every redistributed session's per-ray sample budget (floor
+  2) for that drain: quality degrades *before* any request is dropped.
+* **group-failure retry** — an exception inside a batched render (device
+  fault, injected ``render_fail``) re-queues the group's requests for the
+  next drain; after ``max_attempts`` a request gets a typed
+  `RenderError("render_failed")`.
+* **staleness** — results for sessions the guard rolled back or
+  quarantined carry ``stale=True``: the pixels are real, from the last
+  *good* published snapshot, but training is behind where a healthy
+  session would be.
 """
 from __future__ import annotations
 
@@ -45,6 +63,7 @@ from ..core.trainer import (
 )
 from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
+from ..testing import faults
 from .snapshot import SnapshotStore
 
 # vmapped-over-sessions flavor of the trainer's eval renderer: same
@@ -106,6 +125,8 @@ class RenderRequest:
     session_id: str
     pose: np.ndarray
     submitted_at: float = dc_field(default_factory=obs_trace.clock)
+    deadline_s: float | None = None   # None = no per-request deadline
+    attempts: int = 0                 # failed batched-render attempts so far
 
 
 class RenderResult(NamedTuple):
@@ -116,14 +137,43 @@ class RenderResult(NamedTuple):
     snapshot_version: int
     snapshot_step: int
     latency_s: float
+    # the snapshot is the last *good* one but training has fallen behind
+    # (guard rollback/quarantine) — pixels are valid, freshness is not
+    stale: bool = False
+
+
+class RenderError(NamedTuple):
+    """Typed failure answer: a request that cannot be served errors out
+    deterministically instead of hanging in the queue."""
+    request_id: int
+    session_id: str
+    error: str            # "deadline_expired" | "render_failed"
+    latency_s: float
 
 
 class RenderService:
-    def __init__(self, store: SnapshotStore, latency_window: int = 4096):
+    def __init__(self, store: SnapshotStore, latency_window: int = 4096,
+                 default_deadline_s: float | None = None,
+                 shed_threshold: int | None = None,
+                 max_attempts: int = 2):
+        """default_deadline_s: deadline inherited by requests submitted
+        without one (None = requests never expire, the prior behavior).
+        shed_threshold: queue depth above which a drain halves every
+        redistributed session's sample budget (None = never shed).
+        max_attempts: batched-render tries per request before it errors."""
         self.store = store
+        self.default_deadline_s = default_deadline_s
+        self.shed_threshold = shed_threshold
+        self.max_attempts = int(max_attempts)
         self._geom: dict[str, _SessionGeom] = {}
         self._queue: list[RenderRequest] = []
         self._next_id = 0
+        self._stale: set[str] = set()   # sessions the guard marked degraded
+        # degradation telemetry (always live, like the latency histograms)
+        self.expired = 0
+        self.failed = 0
+        self.shed_drains = 0
+        self.drains = 0
         # per-session serving telemetry, backed by obs Histograms (bounded
         # window -> a long-lived service doesn't grow per-request forever;
         # percentiles come from the recent window, counts are lifetime).
@@ -160,13 +210,24 @@ class RenderService:
         )
         self._registered_at.setdefault(session_id, obs_trace.clock())
 
-    def submit(self, session_id: str, pose: np.ndarray) -> int:
+    def submit(self, session_id: str, pose: np.ndarray,
+               deadline_s: float | None = None) -> int:
         if session_id not in self._geom:
             raise KeyError(f"unknown session {session_id!r}")
-        req = RenderRequest(self._next_id, session_id, np.asarray(pose))
+        req = RenderRequest(self._next_id, session_id, np.asarray(pose),
+                            deadline_s=(deadline_s if deadline_s is not None
+                                        else self.default_deadline_s))
         self._next_id += 1
         self._queue.append(req)
         return req.request_id
+
+    def mark_stale(self, session_id: str, stale: bool = True) -> None:
+        """Guard hook: results for this session carry ``stale=True`` until a
+        healthy publish clears it."""
+        if stale:
+            self._stale.add(session_id)
+        else:
+            self._stale.discard(session_id)
 
     @property
     def pending(self) -> int:
@@ -174,9 +235,11 @@ class RenderService:
 
     # ---- serving ----
 
-    def drain(self) -> list[RenderResult]:
+    def drain(self) -> list:
         """Serve every pending request whose session has a published
-        snapshot; requests without one stay queued for the next drain."""
+        snapshot; requests without one stay queued for the next drain.
+        Returns `RenderResult`s plus typed `RenderError`s for requests past
+        their deadline or past ``max_attempts`` failed renders."""
         with obs_trace.span("serve3d/render_drain", cat="serve3d",
                             args={"pending": len(self._queue)}):
             results = self._drain()
@@ -184,7 +247,29 @@ class RenderService:
             obs_metrics.gauge("serve3d.render.queue_depth").set(len(self._queue))
         return results
 
-    def _drain(self) -> list[RenderResult]:
+    def _drain(self) -> list:
+        self.drains += 1
+        now = obs_trace.clock()
+        results: list = []
+        obs_on = obs_trace.enabled()
+
+        # expiry first: a request past its deadline gets a typed error even
+        # if its session never publishes — expiry is how waiting requests
+        # are guaranteed to terminate
+        keep: list[RenderRequest] = []
+        for req in self._queue:
+            if req.deadline_s is not None and \
+                    now - req.submitted_at > req.deadline_s:
+                self.expired += 1
+                if obs_on:
+                    obs_metrics.counter("serve3d.render.expired").inc()
+                results.append(RenderError(req.request_id, req.session_id,
+                                           "deadline_expired",
+                                           now - req.submitted_at))
+            else:
+                keep.append(req)
+        self._queue = keep
+
         ready: list[tuple[RenderRequest, Any]] = []
         waiting: list[RenderRequest] = []
         for req in self._queue:
@@ -195,18 +280,46 @@ class RenderService:
                 ready.append((req, snap))
         self._queue = waiting
 
+        # overload shedding: past the threshold, degrade quality (halve the
+        # redistributed sample budget this drain) before dropping anything
+        shed = self.shed_threshold is not None and len(ready) > self.shed_threshold
+        if shed:
+            self.shed_drains += 1
+            if obs_on:
+                obs_metrics.counter("serve3d.render.shed_drains").inc()
+                obs_trace.instant("serve3d/render_shed", cat="serve3d",
+                                  args={"ready": len(ready)})
+
         # coalesce by compiled geometry: same field/render config + image
         # dims + serving path (dense vs redistributed at a given budget)
         groups: dict[tuple, list[tuple[RenderRequest, Any]]] = {}
         for req, snap in ready:
             g = self._geom[req.session_id]
+            spr = g.samples_per_ray
+            if shed and spr is not None:
+                spr = max(2, spr // 2)
             key = (g.field_cfg, g.render_cfg, g.h, g.w, g.focal, g.eval_chunk,
-                   g.occ_cfg, g.samples_per_ray)
+                   g.occ_cfg, spr)
             groups.setdefault(key, []).append((req, snap))
 
-        results = []
         for key, items in groups.items():
-            results.extend(self._render_group(*key, items))
+            try:
+                results.extend(self._render_group(*key, items))
+            except Exception:
+                # batched render died (device fault / injected render_fail):
+                # re-queue the group's requests for another attempt, then
+                # answer the exhausted ones with a typed error
+                for req, _snap in items:
+                    req.attempts += 1
+                    if req.attempts < self.max_attempts:
+                        self._queue.append(req)
+                        continue
+                    self.failed += 1
+                    if obs_on:
+                        obs_metrics.counter("serve3d.render.failed").inc()
+                    results.append(RenderError(
+                        req.request_id, req.session_id, "render_failed",
+                        obs_trace.clock() - req.submitted_at))
         results.sort(key=lambda r: r.request_id)
         return results
 
@@ -222,6 +335,10 @@ class RenderService:
     def _render_group_inner(self, field_cfg, render_cfg, h, w, focal,
                             eval_chunk, occ_cfg, samples_per_ray,
                             items) -> list[RenderResult]:
+        inj = faults.check("serve3d.render_group",
+                           session=items[0][0].session_id)
+        if inj is not None and inj.kind == "render_fail":
+            raise faults.InjectedFault("injected batched-render failure")
         g_real = len(items)
         g_pad = _pow2_bucket(g_real)
         padded = items + [items[-1]] * (g_pad - g_real)
@@ -291,6 +408,7 @@ class RenderService:
                 snapshot_version=snap.version,
                 snapshot_step=snap.step,
                 latency_s=lat,
+                stale=sid in self._stale,
             ))
         return out
 
@@ -306,10 +424,17 @@ class RenderService:
         for h in self.latencies.values():
             for v in h.values():
                 merged.observe(v)
+        degraded = {
+            "expired": self.expired,
+            "failed": self.failed,
+            "shed_fraction": self.shed_drains / self.drains if self.drains else 0.0,
+            "stale_sessions": sorted(self._stale),
+        }
         if merged.count == 0:
-            return {"count": 0}
+            return {"count": 0, "degraded": degraded}
         return {
             "count": sum(self.served.values()),
+            "degraded": degraded,
             "p50_ms": merged.quantile(0.50) * 1e3,
             "p95_ms": merged.quantile(0.95) * 1e3,
             "p99_ms": merged.quantile(0.99) * 1e3,

@@ -32,18 +32,34 @@ iterations/sec per session.  Under EDF the urgent session stays primary and
 compatible sessions ride along — a deliberate throughput-over-latency
 trade, since the cohort slice advances M scenes in less wall time than M
 quanta but takes longer than the urgent session's solo slice.
+
+Fault tolerance (see `serve3d.guard`): with ``capture_errors`` on, an
+exception escaping a training slice is caught and parked in ``last_error``
+for the guard to turn into rollbacks instead of killing the quantum loop.
+Sessions in guard backoff (``hold_until`` in the future) are skipped by
+selection, QUARANTINED sessions are terminal (excluded from `live`, so one
+sick scene can't wedge ``all_done``), and a per-session straggler watchdog
+(the TrainDriver EWMA detector) flags slices running ``sigma`` deviations
+over the session's own trend — flagged sessions are deprioritized one turn
+via the slice-credit mechanism (reschedule, never block) and counted in
+``serve3d.straggler.flagged``.
 """
 from __future__ import annotations
 
+import time
+
 from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
-from .session import ACTIVE, DONE, PENDING, SUSPENDED, SceneSession
+from ..runtime.driver import StragglerStats
+from .session import ACTIVE, DONE, PENDING, QUARANTINED, SUSPENDED, SceneSession
 
 
 class SessionScheduler:
     def __init__(self, slice_iters: int = 16, policy: str = "round_robin",
                  max_resident: int | None = None,
-                 max_cohort: int | None = 1):
+                 max_cohort: int | None = 1,
+                 straggler_sigma: float = 4.0,
+                 straggler_alpha: float = 0.25):
         """max_cohort: largest train cohort formed around a quantum's primary
         session — 1 disables cohort formation (pure time-slicing, the
         PR 2 behavior), None removes the cap (every key-matching session
@@ -61,6 +77,16 @@ class SessionScheduler:
         # double-dip relative to singleton sessions
         self._credit: dict[str, int] = {}
         self.last_trained: list[SceneSession] = []
+        # fault tolerance: the guard flips capture_errors on so a slice
+        # exception becomes last_error (inspected after the quantum) instead
+        # of unwinding the service loop
+        self.capture_errors = False
+        self.last_error: Exception | None = None
+        # straggler watchdog: per-session EWMA of slice wall time
+        self.straggler_sigma = float(straggler_sigma)
+        self.straggler_alpha = float(straggler_alpha)
+        self._straggler: dict[str, StragglerStats] = {}
+        self.stragglers_flagged = 0
 
     # ---- membership ----
 
@@ -69,7 +95,11 @@ class SessionScheduler:
         self._admit()
 
     def live(self) -> list[SceneSession]:
-        return [s for s in self.sessions if s.status != DONE]
+        # QUARANTINED is terminal: the session will never train again, so it
+        # must not keep the service loop alive (its last-good snapshot keeps
+        # being served regardless)
+        return [s for s in self.sessions
+                if s.status not in (DONE, QUARANTINED)]
 
     @property
     def all_done(self) -> bool:
@@ -107,10 +137,18 @@ class SessionScheduler:
         live = [s for s in self.sessions if s.status == ACTIVE]
         if not live:
             return None
+        now = obs_trace.clock()
+        ready = [s for s in live if s.hold_until <= now]
+        if not ready:
+            # every active session is in guard backoff: sleep to the
+            # earliest release instead of busy-spinning the quantum loop
+            time.sleep(max(0.0, min(s.hold_until for s in live) - now))
+            now = obs_trace.clock()
+            ready = live
         if self.policy == "edf":
             # deadlines outrank slice credits: an urgent session is never
             # skipped because it already rode along in someone's cohort
-            with_deadline = [s for s in live if s.deadline is not None]
+            with_deadline = [s for s in ready if s.deadline is not None]
             if with_deadline:
                 return min(
                     with_deadline, key=lambda s: s.submitted_at + s.deadline
@@ -120,12 +158,12 @@ class SessionScheduler:
         for _ in range(2 * len(self.sessions)):
             s = self.sessions[self._rr % len(self.sessions)]
             self._rr += 1
-            if s.status == ACTIVE:
+            if s.status == ACTIVE and s.hold_until <= now:
                 if self._credit.get(s.session_id, 0) > 0:
                     self._credit[s.session_id] -= 1
                     continue
                 return s
-        return live[0]
+        return ready[0]
 
     def cohort_for(self, primary: SceneSession) -> list[SceneSession]:
         """The quantum's train cohort: the primary plus every other ACTIVE
@@ -135,11 +173,13 @@ class SessionScheduler:
         if cap <= 1:
             return [primary]
         key = primary.cohort_key()
+        now = obs_trace.clock()
         members = [primary]
         for s in self.sessions:
             if len(members) >= cap:
                 break
-            if s is not primary and s.status == ACTIVE and s.cohort_key() == key:
+            if s is not primary and s.status == ACTIVE and \
+                    s.hold_until <= now and s.cohort_key() == key:
                 members.append(s)
         return members
 
@@ -155,13 +195,25 @@ class SessionScheduler:
         cohort = self.cohort_for(primary)
         if obs_trace.enabled():
             obs_metrics.gauge("serve3d.cohort_size").set(len(cohort))
-        if len(cohort) == 1:
-            primary.run_slice(self.slice_iters)
+        t0 = obs_trace.clock()
+        self.last_error = None
+        try:
+            if len(cohort) == 1:
+                primary.run_slice(self.slice_iters)
+            else:
+                SceneSession.run_cohort_slice(cohort, self.slice_iters)
+                for rider in cohort[1:]:
+                    self._credit[rider.session_id] = \
+                        self._credit.get(rider.session_id, 0) + 1
+        except Exception as e:
+            if not self.capture_errors:
+                raise
+            # park it for the guard: every member gets rolled back (donated
+            # buffers make partially-advanced state untrustworthy), no
+            # rider credits, no straggler sample
+            self.last_error = e
         else:
-            SceneSession.run_cohort_slice(cohort, self.slice_iters)
-            for rider in cohort[1:]:
-                self._credit[rider.session_id] = \
-                    self._credit.get(rider.session_id, 0) + 1
+            self._watch_stragglers(cohort, obs_trace.clock() - t0)
         finished = False
         for s in cohort:
             if s.status == DONE:
@@ -177,3 +229,23 @@ class SessionScheduler:
             self._admit()  # slot reset: finished jobs' slots go to the queue
         self.last_trained = cohort
         return primary
+
+    def _watch_stragglers(self, cohort: list[SceneSession], wall_s: float):
+        """Per-session EWMA watchdog over slice wall time (the TrainDriver
+        straggler detector, applied per scene).  A flagged session is
+        deprioritized one turn via a slice credit — rescheduled, never
+        blocked — so one slow scene stops dragging every other session's
+        latency without stalling its own progress."""
+        dt = wall_s / len(cohort)
+        for s in cohort:
+            stats = self._straggler.setdefault(s.session_id, StragglerStats())
+            if stats.update(dt, self.straggler_sigma, self.straggler_alpha):
+                self.stragglers_flagged += 1
+                self._credit[s.session_id] = \
+                    self._credit.get(s.session_id, 0) + 1
+                if obs_trace.enabled():
+                    obs_metrics.counter("serve3d.straggler.flagged").inc()
+                    obs_trace.instant("serve3d/straggler", cat="serve3d",
+                                      args={"session": s.session_id,
+                                            "slice_s": dt,
+                                            "ewma_s": stats.ewma})

@@ -19,15 +19,26 @@ consistent published snapshot while training keeps mutating the live
 (donated) buffers, and by default are served through the redistributed
 render path (pipeline stage 2b at ``samples_per_ray`` points per ray)
 instead of dense.
+
+Fault tolerance (on by default; see docs/ROBUSTNESS.md): a `SessionGuard`
+inspects every advanced session *before* its snapshot publishes — a
+diverged slice (NaN loss/params, PSNR collapse, slice exception) is rolled
+back to the last good checkpoint and never published, so the store always
+serves healthy params; after ``max_retries`` consecutive failures the
+session is quarantined and its last-good snapshot keeps being served,
+annotated stale.  A failed publish (the store raised before its atomic
+swap) is retried on the next quantum.  Pass ``guard=None``/``False`` for
+the fail-fast PR 5 behavior where any slice error unwinds `run`.
 """
 from __future__ import annotations
 
 from ..obs import export as obs_export
 from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
+from .guard import GuardConfig, SessionGuard
 from .render import RenderService
 from .scheduler import SessionScheduler
-from .session import DONE, SceneSession
+from .session import DONE, QUARANTINED, SceneSession
 from .snapshot import SnapshotStore
 
 
@@ -42,6 +53,9 @@ class ReconstructionService:
         max_cohort: int | None = None,
         redistributed_render: bool = True,
         render_samples_per_ray: int | None = None,
+        guard: GuardConfig | bool | None = True,
+        render_deadline_s: float | None = None,
+        shed_threshold: int | None = None,
     ):
         """snapshot_every: publish a session's snapshot every k-th slice it
         trains (its final slice always publishes).
@@ -57,13 +71,31 @@ class ReconstructionService:
         capped at n_samples: the PR 4 render sweep puts the equal-PSNR
         point at ~4 redistributed samples/ray, so dividing by 4 only once
         the dense ladder is past 16 keeps the ≤ 0.1 dB serving contract at
-        small S too."""
+        small S too.
+
+        guard: fault tolerance — True (default) runs a `SessionGuard` with
+        default `GuardConfig`, a `GuardConfig` customizes it, None/False
+        disables it (slice errors then unwind `run`, the PR 5 behavior).
+
+        render_deadline_s / shed_threshold: per-request render deadline
+        inherited by `request_render` and the queue depth that triggers
+        quality shedding — both forwarded to `RenderService`."""
         self.store = SnapshotStore(persist_dir=persist_dir)
-        self.renderer = RenderService(self.store)
+        self.renderer = RenderService(self.store,
+                                      default_deadline_s=render_deadline_s,
+                                      shed_threshold=shed_threshold)
         self.scheduler = SessionScheduler(
             slice_iters=slice_iters, policy=policy, max_resident=max_resident,
             max_cohort=max_cohort,
         )
+        if guard is True:
+            guard = GuardConfig()
+        self.guard = SessionGuard(guard) if guard else None
+        # with a guard, slice exceptions become rollbacks instead of
+        # unwinding the quantum loop
+        self.scheduler.capture_errors = self.guard is not None
+        self.publish_failures = 0
+        self._publish_retry: set[str] = set()
         self.sessions: dict[str, SceneSession] = {}
         self.snapshot_every = max(1, int(snapshot_every))
         self.redistributed_render = bool(redistributed_render)
@@ -119,30 +151,69 @@ class ReconstructionService:
     # ---- the serving loop ----
 
     def step(self) -> dict:
-        """One quantum: train one cohort slice, publish each advanced
-        session, drain renders."""
+        """One quantum: train one cohort slice, guard-inspect every advanced
+        session, publish the healthy ones, drain renders.  Ordering matters:
+        the guard runs *before* publish, so a diverged slice's params can
+        never reach the snapshot store — a failed member skips its publish
+        and the store keeps serving the last good snapshot."""
         if self._started_at is None:
             self._started_at = obs_trace.clock()
         with obs_trace.span("serve3d/quantum", cat="serve3d",
                             args={"pending_renders": self.renderer.pending}):
             sess = self.scheduler.step()
+            verdicts: dict[str, str] = {}
+            if self.guard is not None and self.scheduler.last_trained:
+                verdicts = self.guard.inspect(self.scheduler.last_trained,
+                                              error=self.scheduler.last_error)
             for member in self.scheduler.last_trained:
+                verdict = verdicts.get(member.session_id, "ok")
+                if verdict != "ok":
+                    self.renderer.mark_stale(member.session_id)
+                    if verdict == "quarantined":
+                        # publish the restored last-good tree once so the
+                        # scene's renders terminate (served stale) even if
+                        # the session never published before
+                        self._publish(member)
+                    continue
                 slices = len(member.telemetry["step"])
                 # a finished session may already be suspended (bounded
                 # residency) — publish still works from its host tree
-                if member.status == DONE or slices % self.snapshot_every == 0:
-                    member.publish(self.store)
+                if (member.status == DONE
+                        or slices % self.snapshot_every == 0
+                        or member.session_id in self._publish_retry):
+                    self._publish(member)
             results = self.renderer.drain()
         if obs_trace.enabled():
             obs_metrics.counter("serve3d.quanta").inc()
             obs_metrics.gauge("serve3d.sessions_active").set(sum(
-                1 for s in self.sessions.values() if s.status != DONE))
+                1 for s in self.sessions.values()
+                if s.status not in (DONE, QUARANTINED)))
         return {
             "trained": sess.session_id if sess is not None else None,
             "cohort": [m.session_id for m in self.scheduler.last_trained],
             "step": sess.step if sess is not None else None,
+            "guard": verdicts,
             "results": results,
         }
+
+    def _publish(self, member: SceneSession) -> None:
+        """Publish with retry-on-failure: the store's swap is atomic, so a
+        raise means the previous snapshot is still the latest — remember the
+        session and try again next quantum instead of unwinding the loop."""
+        try:
+            member.publish(self.store)
+        except Exception:
+            if self.guard is None:
+                raise
+            self.publish_failures += 1
+            self._publish_retry.add(member.session_id)
+            if obs_trace.enabled():
+                obs_metrics.counter("serve3d.snapshot.publish_failures").inc()
+        else:
+            self._publish_retry.discard(member.session_id)
+            if self.guard is None or member.session_id not in \
+                    self.guard.quarantined:
+                self.renderer.mark_stale(member.session_id, False)
 
     def run(self, hook=None, max_quanta: int = 100_000) -> dict:
         """Drive quanta until every session is done and the render queue is
@@ -174,6 +245,9 @@ class ReconstructionService:
             "scenes_per_sec": len(done) / wall if wall > 0 else 0.0,
             "sessions": self.progress(),
             "render": self.renderer.latency_stats(),
+            "guard": self.guard.stats() if self.guard is not None else None,
+            "publish_failures": self.publish_failures,
+            "stragglers_flagged": self.scheduler.stragglers_flagged,
         }
 
     def metrics(self) -> dict:

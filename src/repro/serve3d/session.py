@@ -7,6 +7,14 @@ suspend/resume lifecycle so N sessions can time-share one device:
                  ^            |
                  '--resume()--'--suspend()--> suspended
 
+Two guard-driven transitions ride on top (see `serve3d.guard`):
+`rollback(tree)` replaces the live state with a last-good host tree through
+the bit-exact resume path, and `quarantine(tree)` is a terminal failure
+state that keeps the last-good tree resident on host so serving hooks keep
+working while the scheduler never picks the session again.  `run_slice` and
+`run_cohort_slice` carry ``serve3d.slice`` fault sites
+(`repro.testing.faults`) — one attribute check each when the harness is off.
+
 `run_slice` advances training by a bounded number of iterations and returns;
 the scheduler interleaves slices across sessions.  Training streams are
 keyed by *absolute* step (the trainer folds the iteration index into its
@@ -23,6 +31,7 @@ checkpoint (the fresh-process path).
 """
 from __future__ import annotations
 
+import time
 from typing import Any
 
 import jax
@@ -34,11 +43,13 @@ from ..core import field as field_lib
 from ..core.trainer import Instant3DTrainer, TrainerConfig, TrainState, train_cohort
 from ..data import RaySampler
 from ..obs import trace as obs_trace
+from ..testing import faults
 
 PENDING = "pending"
 ACTIVE = "active"
 SUSPENDED = "suspended"
 DONE = "done"
+QUARANTINED = "quarantined"
 
 
 class SceneSession:
@@ -68,6 +79,7 @@ class SceneSession:
         self.state: TrainState | None = None
         self._host_tree: dict | None = None
         self.status = PENDING
+        self.hold_until = 0.0  # guard backoff: scheduler skips until this clock
         self.submitted_at = obs_trace.clock()
         self.train_wall_s = 0.0
         self.telemetry: dict[str, list] = {"step": [], "loss": [], "live_fraction": []}
@@ -99,6 +111,10 @@ class SceneSession:
     def run_slice(self, n_iters: int) -> dict:
         """Advance training by up to `n_iters` iterations (one time slice)."""
         assert self.status == ACTIVE, f"cannot train a {self.status} session"
+        inj = faults.check("serve3d.slice", session=self.session_id,
+                           step=int(self.step))
+        if inj is not None:
+            self._pre_slice_fault(inj)
         n = min(int(n_iters), self.target_iters - self.step)
         if n <= 0:
             self.status = DONE
@@ -110,8 +126,32 @@ class SceneSession:
             self.state, hist = self.trainer.train(
                 self.state, self.sampler, iters=n, log_every=n
             )
+        if inj is not None:
+            self._post_slice_fault(inj, hist)
         self._record_slice(hist, obs_trace.clock() - t0)
         return hist
+
+    # ---- fault sites (repro.testing.faults; inert unless the knob is on) ----
+
+    def _pre_slice_fault(self, inj):
+        if inj.kind == "exception":
+            raise faults.InjectedFault(
+                f"{self.session_id}: injected exception at step {self.step}")
+        if inj.kind == "slow":
+            time.sleep(float(inj.params.get("seconds", 0.25)))
+
+    def _post_slice_fault(self, inj, hist: dict):
+        """Perturb the slice's end state the way a diverged step would: the
+        params (NaN/Inf gradients landed) or the reported loss."""
+        if inj.kind in ("nan_params", "inf_params"):
+            val = float("nan") if inj.kind == "nan_params" else float("inf")
+            self.state = self.state._replace(
+                params=faults.poison_tree(self.state.params, val))
+        elif inj.kind == "nan_loss":
+            hist["loss"][-1] = float("nan")
+        elif inj.kind == "loss_spike":
+            hist["loss"][-1] = float(hist["loss"][-1]) * float(
+                inj.params.get("factor", 1e6))
 
     def _record_slice(self, hist: dict, wall_s: float):
         self.train_wall_s += wall_s
@@ -146,6 +186,11 @@ class SceneSession:
         trained."""
         assert len({s.cohort_key() for s in sessions}) == 1, "cohort key mismatch"
         assert all(s.status == ACTIVE for s in sessions)
+        injs = [faults.check("serve3d.slice", session=s.session_id,
+                             step=int(s.step)) for s in sessions]
+        for s, inj in zip(sessions, injs):
+            if inj is not None:
+                s._pre_slice_fault(inj)
         n = min(int(n_iters), min(s.target_iters - s.step for s in sessions))
         if n <= 0:
             for s in sessions:
@@ -163,8 +208,10 @@ class SceneSession:
                 iters=n, log_every=n,
             )
         dt = (obs_trace.clock() - t0) / len(sessions)
-        for s, st, hist in zip(sessions, states, hists):
+        for s, st, hist, inj in zip(sessions, states, hists, injs):
             s.state = st
+            if inj is not None:
+                s._post_slice_fault(inj, hist)
             s._record_slice(hist, dt)
         return n
 
@@ -195,6 +242,30 @@ class SceneSession:
         self.state = self.trainer.resume(tree)
         self._host_tree = None
         self.status = DONE if self.done else ACTIVE
+
+    # ---- guard recovery (see serve3d.guard) ----
+
+    def rollback(self, tree: dict):
+        """Replace the live state with a last-good host tree.  Whatever the
+        session currently holds is dropped — after a failed slice the device
+        state is untrustworthy (donation may have consumed its buffers, or
+        its leaves are poisoned).  Restoring through the bit-exact resume
+        path means retraining from the restored step reproduces the
+        fault-free stream bit for bit."""
+        self.state = None
+        self._host_tree = dict(tree)
+        self.resume()
+
+    def quarantine(self, tree: dict | None = None):
+        """Terminal failure state: drop the (possibly poisoned) device
+        state, keep the last-good host tree resident so the serving hooks
+        (`publish`, `evaluate`) still expose the newest healthy params.  A
+        quarantined session is never scheduled again; its snapshot keeps
+        being served, annotated stale."""
+        self.state = None
+        if tree is not None:
+            self._host_tree = dict(tree)
+        self.status = QUARANTINED
 
     # ---- serving hooks ----
 

@@ -11,6 +11,11 @@ With `persist_dir` set, each publish also lands in a per-session
 `CheckpointManager` directory (atomic tmp+rename commit protocol), so a
 service restart can re-serve every scene's latest published view without
 retraining.
+
+Fault site ``serve3d.snapshot_publish`` (kind ``snapshot_fail``) raises
+*before* the lock-swap: a failed publish must leave the previous snapshot
+as the session's latest — the service retries the publish on the next
+quantum and readers never observe a gap.
 """
 from __future__ import annotations
 
@@ -23,6 +28,7 @@ import numpy as np
 from ..checkpoint import CheckpointManager
 from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
+from ..testing import faults
 
 
 class Snapshot(NamedTuple):
@@ -56,6 +62,11 @@ class SnapshotStore:
 
     def _publish(self, session_id: str, params, step: int, meta: dict | None,
                  occ) -> Snapshot:
+        inj = faults.check("serve3d.snapshot_publish", session=session_id,
+                           step=int(step))
+        if inj is not None and inj.kind == "snapshot_fail":
+            raise faults.InjectedFault(
+                f"injected publish failure for {session_id} at step {step}")
         host = jax.device_get(params)
         host_occ = None if occ is None else (
             jax.device_get(occ[0]), int(occ[1])

@@ -1,0 +1,5 @@
+"""repro.testing — test-only runtime hooks (fault injection).
+
+Nothing in this package is imported by production code paths unless the
+corresponding knob is on; see `repro.testing.faults` for the contract."""
+from . import faults  # noqa: F401

@@ -1,0 +1,207 @@
+"""Deterministic fault injection for chaos tests and the CI chaos-smoke leg.
+
+The harness mirrors the `repro.obs` knob pattern: one process-global state
+object, gated by the ``REPRO_FAULTS`` environment variable at import time or
+`configure(enabled=...)` at runtime.  When the knob is off, every
+instrumented call site pays exactly one attribute check (`check` returns
+``None`` immediately) — production paths are zero-overhead and, because
+faults only ever *perturb* state at slice/publish/write boundaries outside
+jitted code, every bit-identity gate in the repo holds with the harness
+compiled in.
+
+Usage (a chaos test or benchmarks/bench_robustness.py):
+
+    from repro.testing import faults
+
+    faults.configure(enabled=True)
+    faults.inject("serve3d.slice", "nan_params", session="scene-001",
+                  at_step=24, times=1)
+    faults.inject("serve3d.render_group", "render_fail", times=1)
+    ...run the service...
+    assert faults.fired_count("nan_params") == 1
+    faults.reset()
+
+Sites are dotted names owned by the instrumented module; each call site
+passes its context (session id, step, ...) and interprets the returned
+`Injection`'s ``kind``:
+
+======================  =====================================================
+site                    kinds understood by the call site
+======================  =====================================================
+``serve3d.slice``       ``nan_params`` (poison the session's params with
+                        NaN after the slice — the observable end state of a
+                        diverged/NaN-gradient step), ``inf_params``,
+                        ``nan_loss`` (poison the reported loss only),
+                        ``loss_spike`` (multiply the reported loss by
+                        ``factor``, default 1e6 — drives the PSNR-collapse
+                        heuristic), ``exception`` (raise `InjectedFault`
+                        before training), ``slow`` (sleep ``seconds``,
+                        default 0.25 — a straggler slice)
+``serve3d.snapshot_publish``  ``snapshot_fail`` (raise before the atomic
+                        swap — the previous snapshot must be retained)
+``serve3d.render_group``      ``render_fail`` (raise inside the batched
+                        render — requests must be retried, then error out)
+``checkpoint.write``    ``kill_mid_write`` (raise after the array file is
+                        written but before the atomic rename — a torn
+                        write), ``corrupt`` (flip bytes in the committed
+                        array file — bit-rot the checksum must catch)
+======================  =====================================================
+
+Matching is deterministic: an injection fires when the site matches, every
+``match`` key equals the call's context, the first ``skip`` matching calls
+have passed, and fewer than ``times`` firings have happened.  ``at_step``
+is sugar for ``match={"step": ...}`` and matches when the context step is
+>= the requested step (slice boundaries rarely land exactly on a step), but
+still at most ``times`` times.  Every firing is recorded (site, kind, ctx)
+for assertions, and mirrored to the obs metrics registry
+(``faults.fired.{kind}``) when observability is on.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from dataclasses import dataclass, field as dc_field
+from typing import Any
+
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
+
+
+def _env_enabled(val: str | None) -> bool:
+    return (val or "").strip().lower() not in ("", "0", "off", "false", "no")
+
+
+class _State:
+    __slots__ = ("enabled", "plan", "fired", "lock")
+
+
+_STATE = _State()
+_STATE.enabled = _env_enabled(os.environ.get("REPRO_FAULTS"))
+_STATE.plan = []
+_STATE.fired = []
+_STATE.lock = threading.Lock()
+
+
+class InjectedFault(RuntimeError):
+    """Raised by call sites executing an ``exception``-style injection."""
+
+
+@dataclass
+class Injection:
+    site: str
+    kind: str
+    match: dict = dc_field(default_factory=dict)
+    at_step: int | None = None
+    skip: int = 0                 # matching calls to let pass before firing
+    times: int | None = 1         # max firings (None = unbounded)
+    params: dict = dc_field(default_factory=dict)
+    seen: int = 0                 # matching calls observed
+    count: int = 0                # firings so far
+
+    def matches(self, ctx: dict) -> bool:
+        for k, v in self.match.items():
+            if ctx.get(k) != v:
+                return False
+        if self.at_step is not None:
+            step = ctx.get("step")
+            if step is None or step < self.at_step:
+                return False
+        return True
+
+
+def enabled() -> bool:
+    return _STATE.enabled
+
+
+def configure(enabled: bool | None = None) -> None:
+    """Runtime override for the ``REPRO_FAULTS`` env default."""
+    if enabled is not None:
+        _STATE.enabled = bool(enabled)
+
+
+def inject(site: str, kind: str, *, at_step: int | None = None, skip: int = 0,
+           times: int | None = 1, **match_and_params) -> Injection:
+    """Arm an injection.  Keyword args that name call-site context keys
+    (``session``, ``step``, ``member``) become match predicates; the rest
+    ride along as ``params`` for the call site (``seconds``, ``factor``).
+    Arming an injection enables the harness."""
+    match_keys = {"session", "step", "member", "request"}
+    match = {k: v for k, v in match_and_params.items() if k in match_keys}
+    params = {k: v for k, v in match_and_params.items() if k not in match_keys}
+    inj = Injection(site=site, kind=kind, match=match, at_step=at_step,
+                    skip=int(skip), times=times, params=params)
+    with _STATE.lock:
+        _STATE.plan.append(inj)
+    _STATE.enabled = True
+    return inj
+
+
+def reset() -> None:
+    """Clear the plan and the firing log (leaves the knob as-is)."""
+    with _STATE.lock:
+        _STATE.plan = []
+        _STATE.fired = []
+
+
+def check(site: str, **ctx: Any) -> Injection | None:
+    """The instrumented-call-site entry point: the first armed injection
+    matching (site, ctx), else None.  One attribute check when disabled."""
+    if not _STATE.enabled:
+        return None
+    with _STATE.lock:
+        for inj in _STATE.plan:
+            if inj.site != site or not inj.matches(ctx):
+                continue
+            inj.seen += 1
+            if inj.seen <= inj.skip:
+                continue
+            if inj.times is not None and inj.count >= inj.times:
+                continue
+            inj.count += 1
+            _STATE.fired.append({"site": site, "kind": inj.kind, **ctx})
+            if obs_trace.enabled():
+                obs_metrics.counter(f"faults.fired.{inj.kind}").inc()
+                obs_trace.instant(f"faults/{inj.kind}", cat="faults",
+                                  args={"site": site})
+            return inj
+    return None
+
+
+def fired() -> list[dict]:
+    """Firing log (site, kind, call context), oldest first."""
+    with _STATE.lock:
+        return list(_STATE.fired)
+
+
+def fired_count(kind: str | None = None) -> int:
+    with _STATE.lock:
+        if kind is None:
+            return len(_STATE.fired)
+        return sum(1 for f in _STATE.fired if f["kind"] == kind)
+
+
+# ---- state poisoners (fault path only — never imported into hot loops) ----
+
+
+def poison_tree(tree, value: float):
+    """Every inexact leaf becomes `value` (NaN/Inf) — the end state of a
+    diverged training step, injected at a slice boundary."""
+    import jax
+    import jax.numpy as jnp
+
+    def p(leaf):
+        x = jnp.asarray(leaf)
+        if jnp.issubdtype(x.dtype, jnp.inexact):
+            return jnp.full_like(x, value)
+        return x
+
+    return jax.tree.map(p, tree)
+
+
+def corrupt_file(path, n_bytes: int = 64, offset: int = 0) -> None:
+    """Flip `n_bytes` bytes of the file in place (bit-rot simulation)."""
+    with open(path, "r+b") as f:
+        f.seek(offset)
+        chunk = f.read(n_bytes)
+        f.seek(offset)
+        f.write(bytes(b ^ 0xFF for b in chunk))

@@ -106,6 +106,27 @@ SPECS: dict[str, list[Rule]] = {
         # redistributed serving must not cost latency or PSNR
         Rule("render_path.p50_ratio", max=1.0, rel_tol=0.20),
         Rule("render_path.psnr_cost_db", max=0.1, abs_tol=0.1),
+        # the session guard must stay under 1% of training wall time and
+        # must never roll back a fault-free run (false-positive detector)
+        Rule("guard.overhead_frac", max=0.01),
+        Rule("guard.rollbacks", max=0),
+    ],
+    "BENCH_robustness.json": [
+        # the chaos run's recovery contract: faults fire, every session
+        # still finishes, the NaN slice forces >= 1 rollback, and fault
+        # isolation holds — uninjected sessions end bit-identical to the
+        # fault-free control run (0.0 dB parity, exactly)
+        Rule("faults_fired.nan_params", min=1),
+        Rule("all_sessions_done", flag=True),
+        Rule("rollbacks", min=1),
+        Rule("uninjected_bit_identical", flag=True),
+        Rule("uninjected_parity_db", max=0.0),
+        # publish-failure injection must be survived, not skipped
+        Rule("publish_failures", min=1),
+        # recovery latency: rollback-to-serving must stay interactive;
+        # trajectory-track the committed baseline (host tree restore +
+        # resume, measured ~10 ms on this container)
+        Rule("recovery_ms.p95", max=1000.0, rel_tol=0.5),
     ],
 }
 
