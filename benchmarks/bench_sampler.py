@@ -1,25 +1,33 @@
 """Occupancy-guided sample redistribution vs the uniform compacted sampler.
 
-Emits `BENCH_sampler.json` with the two views of the adaptive-sampling
-lever (ISSUE 4):
+Emits `BENCH_sampler.json` with the held-out views of the adaptive-sampling
+lever (ISSUE 4 two-way sweep, extended to the ISSUE 9 three-way sweep):
 
 Training draws rays from views 2..7 only; views 0-1 are held out and all
 PSNR numbers are measured on them, so the deltas reflect reconstruction
 quality, not train-pixel fit.
 
-* **PSNR at equal compacted points** — both samplers trained under the same
-  hard point ceiling (`max_budget` below the steady-state live count, the
-  on-device regime).  The uniform sampler must drop live points every step
-  (Morton-tail truncation, counted in `overflow_*`); redistribution spends
-  exactly the ceiling, evenly across rays.  `psnr_rgb_delta_equal_points`
-  must be >= +0.3 dB (asserted in full runs; smoke runs only report it).
+* **PSNR at equal compacted points** — THREE samplers trained under the
+  same hard point ceiling (`max_budget` below the steady-state live count,
+  the on-device regime): uniform (Morton-tail truncation, counted in
+  `overflow_*`), v2 redistribution (even S' = budget // B split over live
+  strata) and v3 redistribution (density-weighted CDF + per-ray variable
+  S').  Full runs assert `psnr_rgb_delta_equal_points` >= +0.3 dB (v2 vs
+  uniform, the PR 4 promise) and `psnr_rgb_delta_v3_vs_v2` >= 0 (v3 must
+  not lose what workload balancing is supposed to win).
 * **Points at equal PSNR** — held-out-view rendering from one trained model
   at equal queried points/ray: uniform-dense at S samples vs adaptive at S
   redistributed samples (placed from 24 jittered candidates).  The sweep
   yields the smallest adaptive budget matching the uniform S=24 quality.
-* **off_bit_identical** (asserted in every mode): with the knob off the
-  redistribute stage is never traced (the bench replaces it with a raiser)
-  and training is bit-identical to the config-default run.
+* **Encoding reuse** (`reuse.*`) — the v3-trained model's compacted sample
+  streams replayed through the cross-step `EncodingReuseCache` under the
+  trainer's real invalidation schedule (density grid updates every step,
+  color at f_color cadence, folds at the occupancy interval).  The hit
+  rate must be nonzero: frozen-color steps and cross-step cell overlap are
+  real, measurable reuse.
+* **off_bit_identical** (asserted in every mode): with the knobs off
+  neither redistribute stage is ever traced (the bench replaces both with
+  raisers) and training is bit-identical to the config-default run.
 """
 from __future__ import annotations
 
@@ -35,8 +43,9 @@ import numpy as np
 from repro.core import Field, Instant3DTrainer, occupancy, losses
 from repro.core.pipeline import RenderPipeline
 from repro.core.rendering import sample_ts
-from repro.core.trainer import image_rays
+from repro.core.trainer import _branch_update, image_rays
 from repro.data import RaySampler
+from repro.kernels.fused_path.reuse import EncodingReuseCache
 
 from .common import BASE_FIELD, BASE_TRAIN, dataset, emit
 
@@ -55,6 +64,7 @@ def _train(iters: int, forbid_stage: bool = False, **cfg_kw):
         def _boom(*a, **k):
             raise AssertionError("redistribute stage traced with the knob off")
         tr.pipeline.redistribute = _boom
+        tr.pipeline.redistribute_v3 = _boom
     state = tr.init(jax.random.PRNGKey(0))
     sampler = RaySampler(ds, views=TRAIN_VIEWS)
     state, hist = tr.train(state, sampler, iters=iters, log_every=max(iters // 4, 1))
@@ -83,6 +93,61 @@ def _render_view(tr, params, bits, ds, v: int, s_query: int, adaptive: bool) -> 
     return float(losses.psnr(rgb, jnp.asarray(ds.images[v])))
 
 
+def _reuse_replay(tr, state, ds, steps: int) -> dict:
+    """Replay the trainer's per-step compacted sample streams through the
+    cross-step EncodingReuseCache under the real invalidation schedule.
+
+    The stream is exactly what training marches: the step-keyed ray batch
+    and ts draw, cull against the trained bitfield, v3 redistribution, and
+    Morton compaction to the budget.  Invalidation follows the trainer's
+    update-frequency schedule — the density grid gets a conservative
+    whole-grid invalidation every step, the color grid only on its
+    f_color-cadence update steps, and occupancy folds clear the epoch — so
+    the measured hit rate is what the schedule actually leaves on the
+    table: frozen-color reuse plus cross-step cell overlap within a fold.
+    """
+    cfg = tr.cfg
+    field = tr.field
+    b, s = cfg.n_rays, cfg.render.n_samples
+    bits = occupancy.bitfield(state.occ_state, cfg.occ)
+    ema = state.occ_state.density_ema
+    r = cfg.occ.resolution
+    budget = MAX_BUDGET
+    cache = EncodingReuseCache(
+        field.density_enc.resolutions,
+        {"density": field.cfg.grid_cfg("density").table_size,
+         "color": field.cfg.grid_cfg("color").table_size},
+    )
+    sampler = RaySampler(ds, views=TRAIN_VIEWS)
+    key = jax.random.PRNGKey(cfg.seed)
+    pipe = tr.pipeline
+    for i in range(int(state.step), int(state.step) + steps):
+        key_batch, key_ts, _ = jax.random.split(jax.random.fold_in(key, i), 3)
+        batch = sampler.sample(key_batch, b)
+        ts = sample_ts(key_ts, b, cfg.render)
+        flat_pts, _, unit = pipe.generate_samples(batch.origins, batch.dirs, ts)
+        live = pipe.cull(flat_pts, unit, bitfield=bits)
+        ema_vals = occupancy.point_density(ema, unit, r).reshape(b, s)
+        ts2, _, valid = pipe.redistribute_v3(ts, live.reshape(b, s), ema_vals,
+                                             budget)
+        flat2, _, unit2 = pipe.generate_samples(batch.origins, batch.dirs, ts2)
+        live2 = valid.reshape(-1) & pipe.cull(flat2, unit2, bitfield=bits)
+        plan = pipe.compact(live2, budget, unit2)
+        pts = np.asarray(unit2[plan.idx])[np.asarray(plan.keep)]
+        for grid in ("density", "color"):
+            cache.encode(grid, jnp.asarray(pts), state.params[f"{grid}_grid"])
+        # invalidation AFTER the lookup: a training step encodes against
+        # the tables its optimizer update then overwrites
+        cache.note_table_update("density")
+        if _branch_update(i, cfg.f_color):
+            cache.note_table_update("color")
+        if (i + 1) % cfg.occ.update_interval == 0:
+            cache.note_fold()
+    stats = cache.stats()
+    stats["steps"] = steps
+    return stats
+
+
 def run(smoke: bool = False) -> None:
     train_iters = 96 if smoke else 200
     ident_iters = 48 if smoke else 96
@@ -96,12 +161,22 @@ def run(smoke: bool = False) -> None:
     tr_u, st_u, ds, hist_u = _train(train_iters, max_budget=MAX_BUDGET)
     tr_a, st_a2, _, hist_a = _train(train_iters, max_budget=MAX_BUDGET,
                                     redistribute=True)
-    assert hist_u["points_queried"][-1] == hist_a["points_queried"][-1] == MAX_BUDGET, \
-        "equal-points comparison requires both variants to sit at the ceiling"
+    tr_v, st_v, _, hist_v = _train(train_iters, max_budget=MAX_BUDGET,
+                                   redistribute_v3=True)
+    assert hist_u["points_queried"][-1] == hist_a["points_queried"][-1] \
+        == hist_v["points_queried"][-1] == MAX_BUDGET, \
+        "equal-points comparison requires every variant to sit at the ceiling"
     ev_u = tr_u.evaluate(st_u.params, ds, views=EVAL_VIEWS)
     ev_a = tr_a.evaluate(st_a2.params, ds, views=EVAL_VIEWS)
+    ev_v = tr_v.evaluate(st_v.params, ds, views=EVAL_VIEWS)
     d_rgb = ev_a["psnr_rgb"] - ev_u["psnr_rgb"]
     d_dep = ev_a["psnr_depth"] - ev_u["psnr_depth"]
+    d_rgb_v3 = ev_v["psnr_rgb"] - ev_u["psnr_rgb"]
+    d_dep_v3 = ev_v["psnr_depth"] - ev_u["psnr_depth"]
+    d_v3_vs_v2 = ev_v["psnr_rgb"] - ev_a["psnr_rgb"]
+
+    # ---- cross-step encoding reuse on the v3 sample stream ----
+    reuse = _reuse_replay(tr_v, st_v, ds, steps=8 if smoke else 32)
 
     # ---- points at equal PSNR: novel-view renders from one model ----
     tr_r, st_r, ds_r, hist_r = _train(32 if smoke else 160)
@@ -134,9 +209,17 @@ def run(smoke: bool = False) -> None:
                          "points_per_step": hist_a["points_queried"][-1],
                          "overflow_steps": hist_a["overflow_steps"],
                          "overflow_points_total": hist_a["overflow_total"]},
+            "v3": {"psnr_rgb": ev_v["psnr_rgb"], "psnr_depth": ev_v["psnr_depth"],
+                   "points_per_step": hist_v["points_queried"][-1],
+                   "overflow_steps": hist_v["overflow_steps"],
+                   "overflow_points_total": hist_v["overflow_total"]},
         },
         "psnr_rgb_delta_equal_points": d_rgb,
         "psnr_depth_delta_equal_points": d_dep,
+        "psnr_rgb_delta_v3_equal_points": d_rgb_v3,
+        "psnr_depth_delta_v3_equal_points": d_dep_v3,
+        "psnr_rgb_delta_v3_vs_v2": d_v3_vs_v2,
+        "reuse": reuse,
         "render_equal_points": {
             str(s): {**v, "delta": v["adaptive"] - v["uniform"]}
             for s, v in sorted(render.items())
@@ -154,15 +237,30 @@ def run(smoke: bool = False) -> None:
          f"psnr={ev_u['psnr_rgb']:.2f} overflow_steps={hist_u['overflow_steps']}")
     emit("sampler[adaptive@cap]", 0.0,
          f"psnr={ev_a['psnr_rgb']:.2f} overflow_steps={hist_a['overflow_steps']}")
+    emit("sampler[v3@cap]", 0.0,
+         f"psnr={ev_v['psnr_rgb']:.2f} dpsnr_v3_vs_v2={d_v3_vs_v2:+.3f}dB "
+         f"overflow_steps={hist_v['overflow_steps']}")
+    emit("sampler[reuse]", 0.0,
+         f"hit_rate={reuse['hit_rate']:.3f} "
+         f"corner_reads_saved={reuse['corner_reads_saved']} "
+         f"steps={reuse['steps']}")
     emit("sampler[parity]", 0.0,
          f"dpsnr_equal_points={d_rgb:+.3f}dB;off_bit_identical={off_bit_identical};"
          f"points_at_equal_psnr={match}/{s_full} -> {OUT_PATH.name}")
 
     assert off_bit_identical, "redistribute=False diverged from the uniform baseline"
+    assert reuse["hit_rate"] > 0.0, (
+        "cross-step encoding reuse must be nonzero under the real "
+        "invalidation schedule (frozen color steps alone guarantee hits)"
+    )
     if not smoke:
         assert d_rgb >= 0.3, (
             f"adaptive sampler must beat uniform by >= 0.3 dB at equal points, "
             f"got {d_rgb:+.3f}"
+        )
+        assert d_v3_vs_v2 >= 0.0, (
+            f"v3 redistribution must not lose to v2 at equal points, "
+            f"got {d_v3_vs_v2:+.3f}"
         )
 
 

@@ -47,6 +47,16 @@ def main():
                          "on its live segments via inverse-CDF placement — "
                          "finer live-region stratification at <= the same "
                          "compacted point budget")
+    ap.add_argument("--redistribute-v3", action="store_true",
+                    help="density-weighted, workload-balanced redistribution "
+                         "(stage 2b v3): strata weighted by occupancy EMA "
+                         "density, per-ray variable S' from one global "
+                         "inverse-CDF, sum(S') <= budget by construction; "
+                         "supersedes --redistribute when both are given")
+    ap.add_argument("--max-budget", type=int, default=None,
+                    help="hard per-step point ceiling (on-device regime; "
+                         "see trainer.autotune_max_budget to derive one "
+                         "from a memory/latency envelope)")
     ap.add_argument("--trace-out", default=None,
                     help="write a Chrome-trace JSON of the run (enables obs)")
     ap.add_argument("--metrics-out", default=None,
@@ -76,6 +86,8 @@ def main():
         compact=not args.no_compact,
         fused_path=not args.no_fused_path,
         redistribute=args.redistribute,
+        redistribute_v3=args.redistribute_v3,
+        max_budget=args.max_budget,
     ))
 
     ckpt = CheckpointManager(args.ckpt_dir, keep_last=2)

@@ -102,24 +102,65 @@ def point_liveness(bits: jnp.ndarray, points_unit: jnp.ndarray, resolution: int)
 
 
 def ray_segment_mask(bits: jnp.ndarray, unit_midpoints: jnp.ndarray, resolution: int) -> jnp.ndarray:
-    """Per-ray live-segment extraction for the redistribute stage.
+    """Per-ray live-segment extraction for the redistribute stage (binary form).
 
     ``unit_midpoints`` (B, M, 3): unit-cube coords of the midpoints of M
     equal-width probe bins along each ray (out-of-box probes should be
     masked by the caller's AABB test — this function only answers the
     occupancy question).  Returns the (B, M) bool live-bin mask: runs of
     True are the ray's live segments, and the mask's row-sums are the
-    per-ray live lengths in units of the bin width.  This is the
-    piecewise-constant sampling density that
-    ``RenderPipeline.redistribute`` inverts (inverse-CDF placement) — in
-    the training hot path the pipeline derives the mask from the cull
-    stage's jittered candidate samples (probe == candidates, so coverage is
+    per-ray live lengths in units of the bin width.  This binary mask is
+    the piecewise-constant sampling density that
+    ``RenderPipeline.redistribute`` (v2) inverts — every live bin weighs
+    the same, regardless of how much density its cell holds.  The v3
+    stage instead inverts the EMA-*weighted* mass from
+    :func:`ray_segment_mass`, of which this mask is exactly the
+    ``mass > 0`` degeneration (same cells, binary weights).  In the
+    training hot path the pipeline derives the mask from the cull stage's
+    jittered candidate samples (probe == candidates, so coverage is
     unbiased across steps); this standalone form serves offline analysis
-    and custom probe placements.  The contract is deliberately a *mask*,
-    not a start/end run-length list: fixed shape (B, M) keeps consumers
+    and custom probe placements.  The contract is deliberately a fixed
+    (B, M) *mask*, not a start/end run-length list, so consumers stay
     jit-stable at any occupancy.
     """
     return point_liveness(bits, unit_midpoints, resolution)
+
+
+def point_density(ema: jnp.ndarray, points_unit: jnp.ndarray, resolution: int) -> jnp.ndarray:
+    """Per-point occupancy-EMA gather — the float twin of `point_liveness`.
+
+    ``ema`` is the (R^3,) f32 ``density_ema`` from :class:`OccupancyState`
+    (same x-major flattening as the bitfield); returns the cell's EMA value
+    at each point, leading shape preserved.  The redistribute-v3 stage uses
+    this to weight live strata by how much density their cells actually
+    hold, instead of the binary live/dead vote."""
+    r = resolution
+    cell = jnp.clip((points_unit * r).astype(jnp.int32), 0, r - 1)
+    flat = cell[..., 0] * r * r + cell[..., 1] * r + cell[..., 2]
+    return ema[flat]
+
+
+def ray_segment_mass(
+    ema: jnp.ndarray,
+    unit_midpoints: jnp.ndarray,
+    resolution: int,
+    threshold: float,
+) -> jnp.ndarray:
+    """EMA-weighted live mass per probe bin — the float form of
+    `ray_segment_mask`.
+
+    Same probe contract as the mask ((B, M, 3) midpoints, fixed-shape
+    output), but each live bin carries its cell's density EMA instead of a
+    binary 1: bins whose cell EMA exceeds ``threshold`` return the EMA
+    value, others return 0.  Row-sums are the per-ray EMA-weighted live
+    masses that redistribute v3's global ray allocation (per-ray S') is
+    proportional to.  Degeneration contract (regression-tested):
+    ``ray_segment_mass(...) > 0`` equals ``ray_segment_mask(bits, ...)``
+    whenever ``bits = ema > threshold`` — thresholding the weighted mass
+    recovers exactly the binary liveness the v2 stage consumes.
+    """
+    d = point_density(ema, unit_midpoints, resolution)
+    return jnp.where(d > threshold, d, 0.0)
 
 
 def occupied_mask_fn(state: OccupancyState, cfg: OccupancyConfig):

@@ -126,17 +126,40 @@ class RenderPipeline:
     path is byte-for-byte the uniform sampler: the stage is never traced,
     deltas fall back to the `jnp.diff` stratum widths, and results are
     bit-identical to a pipeline built without the knob.
+
+    redistribute_v3: density-weighted, workload-balanced stage 2b.  Two
+    upgrades over v2, same gating discipline (knob off => never traced):
+
+    * each live stratum is weighted by the *occupancy EMA* of its cell
+      (saturating alpha weight, see `v3_stratum_weights`) instead of the
+      binary live/dead vote, so in-ray placement concentrates where the
+      surface actually is;
+    * the fixed per-ray split S' = budget // B becomes a per-ray variable
+      S'_i allocated by one global inverse-CDF over the batch's per-ray
+      live masses — rays with long live segments get more of the point
+      budget, dead-heavy rays keep a floor of 1, and `sum(S'_i) <= budget`
+      holds by construction (see `v3_plan`).  The ragged rays live in a
+      fixed (B, S_cap) lane grid with a validity mask; the compact stage
+      packs the valid lanes Morton-ordered into the caller's exact budget
+      with zero overflow, so ragged allocation costs no compiled-shape
+      churn.  `v3_oversub` bounds S_cap (the densest ray can take at most
+      oversub × the even split).
     """
 
     def __init__(self, field, cfg: _r.RenderConfig, *, fused_path: bool = True,
-                 fused_step: bool = True, redistribute: bool = False):
+                 fused_step: bool = True, redistribute: bool = False,
+                 redistribute_v3: bool = False, v3_oversub: int = 4):
         self.field = field
         self.cfg = cfg
         self.fused_path = fused_path and hasattr(field, "query_fused")
         self.fused_step = (
             self.fused_path and fused_step and hasattr(field, "query_step")
         )
-        self.redistribute_on = redistribute
+        # v3 subsumes v2: it is the same stage slot, so turning it on takes
+        # the 2b branch over even if the v2 knob is also set.
+        self.redistribute_on = redistribute or redistribute_v3
+        self.redistribute_v3_on = redistribute_v3
+        self.v3_oversub = int(v3_oversub)
 
     # ---- stage 1: sample generation ----
 
@@ -231,6 +254,139 @@ class RenderPipeline:
         deltas = h / (p * n_out)
         return ts_new, deltas
 
+    # ---- stage 2b, v3: density-weighted, workload-balanced ----
+
+    # Weight floor for live strata: keeps every live cell sampleable even
+    # when its EMA alpha is ~0 (fresh surfaces, warmup), and bounds the
+    # concentration ratio between the densest and thinnest live stratum to
+    # (floor + 1) / floor ≈ 21 — raw EMA ratios span ~1e4 and would starve
+    # low-density live cells entirely.
+    V3_WEIGHT_FLOOR = 0.05
+
+    def v3_stratum_weights(self, live, ema_vals):
+        """Per-stratum sampling weight (B, S) f32 for the v3 CDF.
+
+        `live` bool (B, S) from the cull probe; `ema_vals` (B, S) the
+        occupancy EMA of each candidate's cell (`occupancy.point_density`),
+        or None when no EMA is available (serving without state, tests).
+        The weight is the stratum's saturating alpha `1 - exp(-ema * h)` —
+        the fraction of light a stratum of width h at the cell's EMA
+        density would absorb — plus the floor, masked to live strata.
+        With ema=None it degrades to `floor * live`: a uniform live-strata
+        CDF, i.e. exactly v2's placement density."""
+        b, s = live.shape
+        h = (self.cfg.far - self.cfg.near) / s
+        w = jnp.full((b, s), self.V3_WEIGHT_FLOOR, jnp.float32)
+        if ema_vals is not None:
+            w = w + 1.0 - jnp.exp(-jnp.maximum(ema_vals, 0.0) * h)
+        return live.astype(jnp.float32) * w
+
+    def v3_plan(self, ts, live, ema_vals, budget: int):
+        """Global ragged-allocation plan for redistribute v3.
+
+        Returns a dict of (B,·) arrays — exposed separately from the
+        placement so the property suite can check the plan's invariants
+        directly:
+
+        * ``pdf``/``cdf`` (B, S): each ray's weighted piecewise-constant
+          placement density over the S probe strata (dead rays fall back
+          to uniform); cdf is monotone non-decreasing with cdf[:, -1] ≈ 1.
+        * ``s_ray`` (B,) int32: per-ray sample counts S'_i.  Allocation:
+          every ray gets the floor of 1; the extra E = budget − B samples
+          are split by stratifying the rays' normalized live-mass CDF at E
+          points (`diff(floor(ray_cdf * E + 0.5))` — the edges telescope,
+          so `sum(s_ray) <= budget` holds *by construction*, not by test).
+          Per-ray counts are clamped to the static lane cap ``s_cap``.
+        * ``s_cap`` int (static): lane-grid width, min(oversub × even
+          split, budget − B + 1).
+        * ``mass`` (B,): the per-ray weighted live masses the allocation is
+          proportional to; ``dead`` (B,) bool marks zero-mass rays.
+        """
+        b, s = ts.shape
+        budget = int(budget)
+        e = budget - b                       # extra lanes beyond the 1-floor
+        s_cap = max(1, min(max(1, budget // b) * self.v3_oversub, e + 1))
+
+        w = self.v3_stratum_weights(live, ema_vals)        # (B, S)
+        mass = jnp.sum(w, axis=-1)                         # (B,)
+        dead = mass <= 0.0
+        w_ray = jnp.where(dead[:, None], jnp.ones_like(w), w)
+        pdf = w_ray / jnp.sum(w_ray, axis=-1, keepdims=True)
+        cdf = jnp.cumsum(pdf, axis=-1)
+
+        # global workload balance: stratify the batch's live-mass CDF at E
+        # points.  Normalizing by the last entry makes ray_cdf[-1] exactly
+        # 1.0, so edges[-1] == E and the telescoped sum never exceeds the
+        # budget even under f32 cumsum rounding.
+        ray_mass = jnp.where(dead, 0.0, mass)
+        total = jnp.sum(ray_mass)
+        ray_pdf = jnp.where(total > 0.0, ray_mass / jnp.maximum(total, 1e-12),
+                            1.0 / b)
+        ray_cdf = jnp.cumsum(ray_pdf)
+        ray_cdf = ray_cdf / ray_cdf[-1]
+        edges = jnp.floor(ray_cdf * e + 0.5).astype(jnp.int32)
+        extra = jnp.diff(jnp.concatenate([jnp.zeros((1,), jnp.int32), edges]))
+        s_ray = 1 + jnp.clip(extra, 0, s_cap - 1)
+        return {"pdf": pdf, "cdf": cdf, "s_ray": s_ray, "s_cap": s_cap,
+                "mass": mass, "dead": dead}
+
+    def redistribute_v3(self, ts, live, ema_vals, budget: int):
+        """Density-weighted inverse-CDF placement at ragged per-ray S'.
+
+        Same probe/jitter discipline as v2 (`redistribute`): liveness and
+        in-stratum jitter both come from the uniform candidates `ts`, so the
+        stage stays a pure deterministic function of (ts, live, ema) with no
+        rng plumbing.  Returns fixed-shape lanes:
+
+        * ts_new (B, s_cap): ascending per ray; lane k of ray i is a placed
+          sample iff ``valid[i, k]`` (k < S'_i), else parked at `far`;
+        * deltas (B, s_cap): per-sample quadrature widths, 0 on invalid
+          lanes.  Raw widths h / (p_j · S'_i) are renormalized per ray so
+          the valid lanes sum *exactly* to the ray's live arc length (for
+          uniform weights the factor is 1 and v2's quadrature is
+          recovered); dead rays normalize to the full near–far span, v2's
+          uniform-fallback convention.
+        * valid (B, s_cap) bool: the ragged-ray mask the compact stage
+          packs (invalid lanes are culled, so they cost no shade work and
+          composite as exactly zero).
+        """
+        b, s = ts.shape
+        near, far = self.cfg.near, self.cfg.far
+        h = (far - near) / s
+        plan = self.v3_plan(ts, live, ema_vals, budget)
+        pdf, cdf, s_ray, s_cap = (
+            plan["pdf"], plan["cdf"], plan["s_ray"], plan["s_cap"])
+
+        k = jnp.arange(s_cap)
+        valid = k[None, :] < s_ray[:, None]                # (B, s_cap)
+
+        # stratified u in (0,1) at the ray's own S': jitter recycled from
+        # the candidate samples (column k mod S keeps every lane jittered)
+        tsrc = ts[:, k % s]
+        jitter = (tsrc - near) / (far - near) * s
+        jitter = jnp.clip(jitter - jnp.floor(jitter), 0.0, 1.0 - 1e-6)
+        sr = s_ray.astype(jnp.float32)[:, None]
+        u = jnp.clip((k[None, :] + jitter) / sr, 0.0, 1.0 - 1e-9)
+        u = u * cdf[:, -1:]                                # absorb rounding
+
+        j = jax.vmap(lambda c, uu: jnp.searchsorted(c, uu, side="right"))(cdf, u)
+        j = jnp.clip(j, 0, s - 1)
+        cdf_lo = jnp.where(
+            j > 0, jnp.take_along_axis(cdf, jnp.maximum(j - 1, 0), axis=-1), 0.0
+        )
+        p = jnp.maximum(jnp.take_along_axis(pdf, j, axis=-1), 1e-12)
+        frac = jnp.clip((u - cdf_lo) / p, 0.0, 1.0 - 1e-6)
+        ts_new = near + (j.astype(jnp.float32) + frac) * h
+        ts_new = jnp.where(valid, ts_new, far)             # park invalid lanes
+
+        # ragged quadrature: dt = h / (p_j · S'_i) on valid lanes, then a
+        # per-ray renormalization pins the row sum to the live arc length
+        dt_raw = jnp.where(valid, h / (p * sr), 0.0)
+        live_len = jnp.sum(live.astype(jnp.float32), axis=-1) * h
+        target = jnp.where(plan["dead"], far - near, live_len)
+        deltas = dt_raw * (target / jnp.maximum(jnp.sum(dt_raw, -1), 1e-12))[:, None]
+        return ts_new, deltas, valid
+
     # ---- stage 3: compact ----
 
     def compact(self, live, budget: int, unit=None) -> CompactionPlan:
@@ -318,6 +474,7 @@ class RenderPipeline:
         bitfield=None,
         mask_fn=None,
         budget: int | None = None,
+        occ_ema=None,
     ):
         """Render a ray batch.  budget MUST be a static python int (or None
         for the dense path) — it fixes the compiled point-batch shape.
@@ -328,6 +485,13 @@ class RenderPipeline:
         the reported `points_queried` can only shrink.  `live_fraction` then
         reports the probe's (uniform-equivalent) live fraction so budget
         controllers keep seeing the quantity they calibrate against.
+
+        With `redistribute_v3` on, stage 2b instead places a *variable*
+        S'_i per ray (density-weighted when `occ_ema` — the (R^3,) f32
+        occupancy EMA — is given), emitting a ragged (B, S_cap) lane grid
+        whose valid lanes the compact stage packs into exactly `budget`
+        points, zero overflow by construction.  `occ_ema` is only read by
+        the v3 branch; passing it elsewhere changes nothing.
         """
         b, s = ts.shape
         n = b * s
@@ -351,11 +515,28 @@ class RenderPipeline:
                 # occupancy probe; their mean is exactly the uniform sampler's
                 # live fraction — what the budget controller calibrates against
                 probe_live_frac = jnp.mean(live.astype(jnp.float32))
-                s = min(s, min(int(budget), n) // b)
-                ts, deltas = self.redistribute(ts, live.reshape(b, -1), n_out=s)
-                budget = n = b * s
-                flat_pts, flat_dirs, unit = self.generate_samples(origins, dirs, ts)
-                live = self.cull(flat_pts, unit, bitfield=bitfield, mask_fn=mask_fn)
+                if self.redistribute_v3_on:
+                    ema_vals = None
+                    if occ_ema is not None:
+                        r = _cube_root(occ_ema.shape[0])
+                        ema_vals = occ_lib.point_density(
+                            occ_ema, unit, r).reshape(b, s)
+                    ts, deltas, lane_valid = self.redistribute_v3(
+                        ts, live.reshape(b, s), ema_vals, int(budget))
+                    n = b * ts.shape[1]
+                    flat_pts, flat_dirs, unit = self.generate_samples(
+                        origins, dirs, ts)
+                    # invalid lanes are dead by decree: they never reach the
+                    # shade stage, and sum(S') <= budget makes the compacted
+                    # packing overflow-free
+                    live = lane_valid.reshape(-1) & self.cull(
+                        flat_pts, unit, bitfield=bitfield, mask_fn=mask_fn)
+                else:
+                    s = min(s, min(int(budget), n) // b)
+                    ts, deltas = self.redistribute(ts, live.reshape(b, -1), n_out=s)
+                    budget = n = b * s
+                    flat_pts, flat_dirs, unit = self.generate_samples(origins, dirs, ts)
+                    live = self.cull(flat_pts, unit, bitfield=bitfield, mask_fn=mask_fn)
 
         if budget is None:
             with _trace.span("pipeline/shade", cat="pipeline",

@@ -68,7 +68,8 @@ def eval_render_fn(field_cfg, render_cfg: rendering.RenderConfig, chunk: int):
 
 
 def make_redistributed_render_chunk(field_cfg, render_cfg: rendering.RenderConfig,
-                                    occ_cfg: occupancy.OccupancyConfig, budget: int):
+                                    occ_cfg: occupancy.OccupancyConfig, budget: int,
+                                    redistribute_v3: bool = False):
     """Occupancy-redistributed chunk renderer (pipeline stage 2b) built purely
     from configs: (params, origins (N,3), dirs (N,3), ts (N,S), occ_ema,
     occ_step) -> (rgb, depth).
@@ -86,13 +87,22 @@ def make_redistributed_render_chunk(field_cfg, render_cfg: rendering.RenderConfi
     fused_path stays OFF here: the fused query's forward-pass corner-stream
     argsort buys its cost back in the pre-sorted backward merge, and a
     render has no backward — the plain per-grid query shades the compacted
-    set cheaper."""
+    set cheaper.
+
+    redistribute_v3=True serves the density-weighted ragged path instead:
+    per-ray sample counts follow the chunk's live-mass distribution (the
+    coalescer's compact stage packs the unequal rays Morton-ordered into
+    the same static budget), and the published occupancy EMA weights the
+    in-ray placement — served views then march the same v3 quadrature a
+    redistribute_v3 trainer trains with."""
     pipeline = RenderPipeline(field_lib.Field(field_cfg), render_cfg,
-                              fused_path=False, redistribute=True)
+                              fused_path=False, redistribute=True,
+                              redistribute_v3=bool(redistribute_v3))
 
     def render_chunk(params, origins, dirs, ts, occ_ema, occ_step):
         bits = occupancy.bitfield(occupancy.OccupancyState(occ_ema, occ_step), occ_cfg)
-        out = pipeline(params, origins, dirs, ts, bitfield=bits, budget=int(budget))
+        out = pipeline(params, origins, dirs, ts, bitfield=bits,
+                       budget=int(budget), occ_ema=occ_ema)
         return out["rgb"], out["depth"]
 
     return render_chunk
@@ -103,12 +113,15 @@ _REDIST_RENDER_CACHE: dict[tuple, Any] = {}
 
 def redistributed_render_fn(field_cfg, render_cfg: rendering.RenderConfig,
                             occ_cfg: occupancy.OccupancyConfig,
-                            chunk: int, samples_per_ray: int):
+                            chunk: int, samples_per_ray: int,
+                            redistribute_v3: bool = False):
     """Jitted `make_redistributed_render_chunk`; budget = chunk·samples_per_ray."""
-    key = (field_cfg, render_cfg, occ_cfg, int(chunk), int(samples_per_ray))
+    key = (field_cfg, render_cfg, occ_cfg, int(chunk), int(samples_per_ray),
+           bool(redistribute_v3))
     if key not in _REDIST_RENDER_CACHE:
         _REDIST_RENDER_CACHE[key] = jax.jit(make_redistributed_render_chunk(
-            field_cfg, render_cfg, occ_cfg, int(chunk) * int(samples_per_ray)
+            field_cfg, render_cfg, occ_cfg, int(chunk) * int(samples_per_ray),
+            redistribute_v3=bool(redistribute_v3),
         ))
     return _REDIST_RENDER_CACHE[key]
 
@@ -183,11 +196,72 @@ class TrainerConfig:
     # existing (freeze_color, freeze_density, budget, use_bits) key already
     # pins the redistributed shapes — no new cache dimension.
     redistribute: bool = False
+    # density-weighted, workload-balanced redistribution (stage 2b, v3):
+    # live strata are weighted by the occupancy EMA (samples concentrate at
+    # surface crossings) and the per-ray sample count S'_i is allocated by
+    # one global inverse-CDF over the batch's live masses — rays with long
+    # live segments get more of the point budget, sum(S') <= budget by
+    # construction, and the compact stage Morton-packs the ragged rays into
+    # exactly the budget.  Supersedes `redistribute` when both are set.
+    # Budget keying: the ragged lane shapes derive from the *static* budget
+    # at trace time and the knob lives on this config, so the existing
+    # (cfg, ..., budget, use_bits) step-cache key already pins every v3
+    # shape variant — no new cache dimension.  Off (default) is bit-exact:
+    # the stage is never traced.
+    redistribute_v3: bool = False
     # hard per-step point ceiling (on-device memory/latency cap).  When it
     # clamps the bucket below the live count, the uniform sampler must drop
     # live points every step (Morton-tail truncation); redistribution
     # spends exactly the ceiling instead, evenly across rays.
     max_budget: int | None = None
+
+
+def autotune_max_budget(
+    field_cfg,
+    render_cfg: rendering.RenderConfig,
+    *,
+    memory_bytes: int | None = None,
+    latency_ms: float | None = None,
+    us_per_point: float | None = None,
+    mlp_width: int = 64,
+    min_budget: int = 512,
+) -> int | None:
+    """Derive a `TrainerConfig.max_budget` ceiling from device constraints.
+
+    The on-device caps the paper targets are memory (a headset SoC's working
+    set) and per-step latency; this hook turns either into the pow2 point
+    ceiling the budget controller (and redistribute v3's exact-spend
+    allocation) consumes:
+
+    * memory: bytes/point is modeled from the field config — per grid
+      L·F·4 B of features plus 8·4 B of corner indices, point/dir/sigma/rgb
+      lanes, and two MLP activation slabs (forward + the recompute-policy
+      backward residual).  `memory_bytes // bytes_per_point`, bucketed DOWN
+      to a power of two (a ceiling must never round up).
+    * latency: `latency_ms` over a measured `us_per_point` (e.g. the
+      BENCH_fused_path per-point time) — callers without a measurement can
+      pass none and get a memory-only answer.
+
+    Returns the binding (smaller) ceiling, floored at `min_budget`, or None
+    when no constraint was given (no ceiling — the suggest_budget default).
+    """
+    caps = []
+    if memory_bytes is not None:
+        n_grids = 2 if getattr(field_cfg, "decomposed", True) else 1
+        feat = field_cfg.n_levels * field_cfg.n_features * 4 * n_grids
+        corners = field_cfg.n_levels * 8 * 4 * n_grids
+        lanes = (3 + 3 + 1 + 3) * 4                      # point/dir/sigma/rgb
+        acts = 2 * mlp_width * 4                          # fwd + bwd residual
+        caps.append(int(memory_bytes) // (feat + corners + lanes + acts))
+    if latency_ms is not None and us_per_point:
+        caps.append(int(float(latency_ms) * 1e3 / float(us_per_point)))
+    if not caps:
+        return None
+    cap = max(min(caps), int(min_budget))
+    b = 1
+    while b * 2 <= cap:
+        b *= 2
+    return b
 
 
 @jax.jit
@@ -264,7 +338,10 @@ def _make_raw_step(field, opt, pipeline, cfg: TrainerConfig, freeze_color: bool,
             state = occupancy.OccupancyState(occ_ema, folded)
             bits = occupancy.bitfield(state, cfg.occ)
         out = pipeline(
-            params, batch.origins, batch.dirs, ts, bitfield=bits, budget=budget
+            params, batch.origins, batch.dirs, ts, bitfield=bits, budget=budget,
+            # the EMA only feeds redistribute v3's stratum weights; the
+            # pipeline ignores it on every other path
+            occ_ema=occ_ema if use_bits else None,
         )
         aux = {
             "live_fraction": out["live_fraction"],
@@ -346,6 +423,7 @@ def cohort_step_fn(field_cfg, cfg: TrainerConfig, freeze_color: bool,
         pipeline = RenderPipeline(
             field, cfg.render, fused_path=cfg.fused_path,
             fused_step=cfg.fused_step, redistribute=cfg.redistribute,
+            redistribute_v3=cfg.redistribute_v3,
         )
         raw = _make_raw_step(field, _make_opt(cfg), pipeline, cfg,
                              freeze_color, freeze_density, budget, use_bits)
@@ -392,6 +470,7 @@ class Instant3DTrainer:
         self.pipeline = RenderPipeline(
             field, cfg.render, fused_path=cfg.fused_path,
             fused_step=cfg.fused_step, redistribute=cfg.redistribute,
+            redistribute_v3=cfg.redistribute_v3,
         )
         self._step_fns = {}
         # host-side live-fraction estimate driving the compaction budget;

@@ -1,3 +1,3 @@
 """Fused compacted-path training kernel (FMU coalesced reads + pre-sorted
 BUM backward).  See ops.make_fused_encode."""
-from . import kernel, ops, ref  # noqa: F401
+from . import kernel, ops, ref, reuse  # noqa: F401

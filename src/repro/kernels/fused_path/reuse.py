@@ -1,0 +1,192 @@
+"""Cross-step encoding-reuse cache (ASDR-style temporal data reuse).
+
+The encoding stage re-interpolates every queried point from scratch each
+step, but large parts of the hash tables are bit-stable between steps:
+
+* a grid frozen by the update-frequency schedule (F_C = 0.5 skips the
+  color grid's optimizer update on half the iterations) does not change
+  AT ALL between those steps;
+* rows the optimizer has never touched (zero gradient traffic AND zero
+  Adam moments) keep their init values;
+* between occupancy folds the set of live cells — hence the set of rows
+  the address streams can even name — is fixed.
+
+For any cell whose 8 corner rows (per level) are bit-stable since the cell
+was last encoded, the interpolated feature rows are a pure function of
+geometry and can be served from cache instead of re-gathered and
+re-interpolated.  This module is the host-side bookkeeping for that reuse:
+
+* rows are named in the fused path's canonical address-stream convention
+  (`ref.address_stream`: level-major flat id ``l * T + idx``), so the same
+  streams the BUM backward sorts are what invalidate the cache;
+* entries are keyed ``(grid, level, cell)`` within a fold epoch — a fold
+  (occupancy update) bumps the epoch and drops every entry, since the live
+  cell set itself may have moved;
+* `note_table_update(grid)` invalidates per-grid on any table update;
+  passing the step's touched rows (the backward's address stream) narrows
+  the invalidation to exactly the rows that received gradient traffic.
+
+The cache is value-correct by construction, not by luck: a hit replays the
+*same* gathered corner rows through the *same* trilinear arithmetic as
+`hash_encode.ref.encode_level`, so cached and recomputed encodings are
+bit-identical whenever the invalidation contract is honored (property-
+tested in tests/test_encoding_reuse.py).  Cohort members viewing the same
+scene share one cache instance: the cohort trains bit-identical params
+across members, so table rows — and therefore entries — are shared.
+
+This is host-side numpy bookkeeping (dict + version arrays), the CPU twin
+of an on-accelerator SRAM cache; it measures and serves reuse for eager
+consumers (serving, benchmarks, analysis), not for jitted training steps.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..hash_encode import ref as he_ref
+
+
+def stream_reuse_mask(addrs: np.ndarray, row_stamp: np.ndarray, since: int) -> np.ndarray:
+    """Reuse-aware view of an address stream: True where the named row has
+    NOT changed since version ``since`` — i.e. reads a cache written at that
+    version may still serve.  ``addrs`` is a level-major flat row stream
+    (`ref.address_stream` convention), ``row_stamp`` the per-row last-change
+    versions."""
+    return np.asarray(row_stamp)[np.asarray(addrs)] <= int(since)
+
+
+class EncodingReuseCache:
+    """(grid, level, cell, fold)-keyed cache of interpolation corner rows.
+
+    Parameters: ``resolutions`` (L,) per-level grid resolutions shared by
+    all grids (the decomposed field's convention); ``table_sizes`` maps grid
+    name -> per-level table size T.  Feature width is discovered from the
+    tables at encode time.
+    """
+
+    def __init__(self, resolutions, table_sizes: dict):
+        self.resolutions = tuple(int(r) for r in np.asarray(resolutions).reshape(-1))
+        self.table_sizes = {g: int(t) for g, t in table_sizes.items()}
+        self.dense_flags = {
+            g: he_ref.level_is_dense(np.asarray(self.resolutions), t)
+            for g, t in self.table_sizes.items()
+        }
+        self.fold = 0
+        self._version = 0
+        n_lv = len(self.resolutions)
+        # per-row last-change version, level-major flat (l * T + idx)
+        self._row_stamp = {
+            g: np.zeros(n_lv * t, np.int64) for g, t in self.table_sizes.items()
+        }
+        # (grid, level) -> {cell_flat: (rows (8,F) np, addrs (8,) np, stamp)}
+        self._entries = {
+            (g, l): {} for g in self.table_sizes for l in range(n_lv)
+        }
+        self.hits = 0
+        self.misses = 0
+
+    # ---- invalidation events ----
+
+    def note_fold(self) -> None:
+        """Occupancy fold: new epoch, the live cell set may have moved —
+        every entry is dropped (the fold count is part of the key)."""
+        self.fold += 1
+        for d in self._entries.values():
+            d.clear()
+
+    def note_table_update(self, grid: str, touched_rows=None) -> None:
+        """A training step updated ``grid``'s tables.
+
+        With ``touched_rows`` (level-major flat row ids — the backward's
+        `address_stream`, or any superset of the rows that changed), only
+        those rows' stamps advance; entries over other rows keep serving.
+        Without it, the whole grid is conservatively invalidated.
+        """
+        self._version += 1
+        if touched_rows is None:
+            self._row_stamp[grid][:] = self._version
+        else:
+            rows = np.asarray(touched_rows).reshape(-1)
+            self._row_stamp[grid][rows] = self._version
+
+    # ---- lookup ----
+
+    def _cells(self, points, resolution: int):
+        """Unique base cells + inverse map for one level.  Cell id flattens
+        the base corner coords (x-major) — all points in a cell share the
+        same 8 corner rows, the unit of caching."""
+        scaled = np.asarray(points, np.float32) * np.float32(resolution)
+        base = np.floor(scaled).astype(np.int64)
+        flat = (base[:, 0] * resolution + base[:, 1]) * resolution + base[:, 2]
+        uniq, inverse = np.unique(flat, return_inverse=True)
+        return uniq, inverse
+
+    def encode(self, grid: str, points_unit, tables) -> jnp.ndarray:
+        """Multires encoding of ``points_unit`` (N,3) against ``tables``
+        (L,T,F), serving cached corner rows where valid.
+
+        Bit-identical to `hash_encode.ref.hash_encode` at all times: hits
+        and misses alike go through the reference trilinear weighted sum;
+        only the (L,T,F) gather is skipped on a hit.  Callers own the
+        invalidation contract — `note_table_update` after any optimizer
+        update to this grid, `note_fold` at occupancy folds.
+        """
+        pts = jnp.asarray(points_unit)
+        tabs_np = np.asarray(tables)
+        t = self.table_sizes[grid]
+        stamp = self._row_stamp[grid]
+        outs = []
+        for l, res in enumerate(self.resolutions):
+            store = self._entries[(grid, l)]
+            uniq, inverse = self._cells(pts, res)
+            n_u = uniq.shape[0]
+            f = tabs_np.shape[-1]
+            rows_u = np.empty((n_u, 8, f), tabs_np.dtype)
+            miss_cells = []
+            for ui, cell in enumerate(uniq):
+                hit = store.get(int(cell))
+                if hit is not None and (stamp[hit[1]] <= hit[2]).all():
+                    rows_u[ui] = hit[0]
+                    self.hits += 1
+                else:
+                    miss_cells.append(ui)
+                    self.misses += 1
+            if miss_cells:
+                mi = np.asarray(miss_cells)
+                base = np.stack(np.unravel_index(uniq[mi], (res,) * 3), axis=-1)
+                corners = base[:, None, :] + he_ref.CORNERS[None, :, :]
+                idx = np.asarray(he_ref.corner_index(
+                    jnp.asarray(corners), res, t, bool(self.dense_flags[grid][l])
+                ))
+                rows_u[mi] = tabs_np[l][idx]
+                addrs = idx + l * t
+                for k, ui in enumerate(mi):
+                    store[int(uniq[ui])] = (rows_u[ui], addrs[k], self._version)
+            # reference interpolation arithmetic on the (cached or fresh)
+            # rows — the weights come from the same jnp geometry as the
+            # oracle, so hit and miss paths are bit-identical to it
+            _, weights = he_ref._level_corners(pts, res)
+            feats = jnp.asarray(rows_u)[inverse]
+            outs.append(jnp.sum(weights[..., None] * feats.astype(jnp.float32), axis=1))
+        return jnp.concatenate(outs, axis=-1)
+
+    # ---- accounting ----
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def stats(self) -> dict:
+        """Reuse accounting in the spirit of `ref.dedup_stats`: each hit is
+        8 corner-row reads (per level) the table never sees."""
+        return {
+            "lookups": int(self.lookups),
+            "hits": int(self.hits),
+            "misses": int(self.misses),
+            "hit_rate": self.hit_rate(),
+            "corner_reads_saved": int(self.hits) * 8,
+            "fold": int(self.fold),
+        }

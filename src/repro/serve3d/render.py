@@ -87,17 +87,25 @@ def batched_render_fn(field_cfg, render_cfg: rendering.RenderConfig,
 
 def batched_redistributed_render_fn(field_cfg, render_cfg: rendering.RenderConfig,
                                     occ_cfg, chunk: int, group: int,
-                                    samples_per_ray: int):
+                                    samples_per_ray: int,
+                                    redistribute_v3: bool = False):
     """Redistributed flavor of `batched_render_fn`: adds per-session
     occupancy (ema (G,R^3), fold count (G,)) inputs and shades only
-    chunk·samples_per_ray points per session instead of chunk·S."""
+    chunk·samples_per_ray points per session instead of chunk·S.
+
+    redistribute_v3=True serves the density-weighted ragged path: the
+    coalescer's chunk budget is spent unevenly across the chunk's rays
+    (long live segments get more samples, packed Morton-ordered by the
+    pipeline's compact stage), with the snapshot EMA weighting in-ray
+    placement."""
     key = (field_cfg, render_cfg, occ_cfg, int(chunk), int(group),
-           int(samples_per_ray))
+           int(samples_per_ray), bool(redistribute_v3))
     if key not in _BATCH_RENDER_CACHE:
         _BATCH_RENDER_CACHE[key] = jax.jit(
             jax.vmap(make_redistributed_render_chunk(
                 field_cfg, render_cfg, occ_cfg,
-                int(chunk) * int(samples_per_ray)),
+                int(chunk) * int(samples_per_ray),
+                redistribute_v3=bool(redistribute_v3)),
                 in_axes=(0, 0, 0, None, 0, 0))
         )
     return _BATCH_RENDER_CACHE[key]
@@ -117,6 +125,7 @@ class _SessionGeom:
     eval_chunk: int
     occ_cfg: Any = None            # OccupancyConfig for bitfield reconstruction
     samples_per_ray: int | None = None  # None => dense serving
+    redistribute_v3: bool = False  # density-weighted ragged serving (stage 2b v3)
 
 
 @dataclass
@@ -196,17 +205,21 @@ class RenderService:
 
     def register_session(self, session_id: str, field_cfg, render_cfg,
                          h: int, w: int, focal: float, eval_chunk: int = 4096,
-                         occ_cfg=None, samples_per_ray: int | None = None):
+                         occ_cfg=None, samples_per_ray: int | None = None,
+                         redistribute_v3: bool = False):
         """samples_per_ray: serve this session through the redistributed
         render path at that per-ray point budget (requires occ_cfg so the
         snapshot's EMA can be thresholded into a bitfield); None serves
-        dense."""
+        dense.  redistribute_v3: spend that budget density-weighted and
+        unevenly across each chunk's rays (stage 2b v3) instead of the
+        fixed per-ray split."""
         if samples_per_ray is not None and occ_cfg is None:
             raise ValueError("samples_per_ray needs occ_cfg for the bitfield")
         self._geom[session_id] = _SessionGeom(
             field_cfg, render_cfg, int(h), int(w), float(focal), int(eval_chunk),
             occ_cfg=occ_cfg,
             samples_per_ray=None if samples_per_ray is None else int(samples_per_ray),
+            redistribute_v3=bool(redistribute_v3),
         )
         self._registered_at.setdefault(session_id, obs_trace.clock())
 
@@ -299,7 +312,7 @@ class RenderService:
             if shed and spr is not None:
                 spr = max(2, spr // 2)
             key = (g.field_cfg, g.render_cfg, g.h, g.w, g.focal, g.eval_chunk,
-                   g.occ_cfg, spr)
+                   g.occ_cfg, spr, g.redistribute_v3)
             groups.setdefault(key, []).append((req, snap))
 
         for key, items in groups.items():
@@ -324,17 +337,19 @@ class RenderService:
         return results
 
     def _render_group(self, field_cfg, render_cfg, h, w, focal, eval_chunk,
-                      occ_cfg, samples_per_ray, items) -> list[RenderResult]:
+                      occ_cfg, samples_per_ray, redistribute_v3,
+                      items) -> list[RenderResult]:
         with obs_trace.span("serve3d/render_group", cat="serve3d",
                             args={"group": len(items),
-                                  "redistribute": samples_per_ray is not None}):
+                                  "redistribute": samples_per_ray is not None,
+                                  "v3": bool(redistribute_v3)}):
             return self._render_group_inner(
                 field_cfg, render_cfg, h, w, focal, eval_chunk,
-                occ_cfg, samples_per_ray, items)
+                occ_cfg, samples_per_ray, redistribute_v3, items)
 
     def _render_group_inner(self, field_cfg, render_cfg, h, w, focal,
                             eval_chunk, occ_cfg, samples_per_ray,
-                            items) -> list[RenderResult]:
+                            redistribute_v3, items) -> list[RenderResult]:
         inj = faults.check("serve3d.render_group",
                            session=items[0][0].session_id)
         if inj is not None and inj.kind == "render_fail":
@@ -366,7 +381,8 @@ class RenderService:
             occ_step = jnp.asarray([int(snap.occ[1]) for _req, snap in padded],
                                    jnp.int32)
             fn_r = batched_redistributed_render_fn(
-                field_cfg, render_cfg, occ_cfg, chunk, g_pad, samples_per_ray)
+                field_cfg, render_cfg, occ_cfg, chunk, g_pad, samples_per_ray,
+                redistribute_v3=bool(redistribute_v3))
             fn = lambda p, o, d, t: fn_r(p, o, d, t, occ_ema, occ_step)
         else:
             fn = batched_render_fn(field_cfg, render_cfg, chunk, g_pad)

@@ -142,6 +142,10 @@ class ReconstructionService:
             sid, field_cfg, trainer_cfg.render,
             dataset.h, dataset.w, dataset.focal, trainer_cfg.eval_chunk,
             occ_cfg=trainer_cfg.occ, samples_per_ray=spr,
+            # served views march whatever stage-2b variant the trainer
+            # trains with, so the quadrature-mismatch annealing holds for
+            # v3 sessions too
+            redistribute_v3=trainer_cfg.redistribute_v3,
         )
         return sid
 

@@ -204,6 +204,28 @@ def test_suggest_budget_max_ceiling():
     assert suggest_budget(1.0, n) == n                      # no cap: unchanged
 
 
+def test_autotune_max_budget():
+    """Device-envelope -> pow2 ceiling: memory and latency caps bind
+    independently, the smaller wins, the floor holds, and no constraint
+    means no ceiling."""
+    from repro.core.trainer import autotune_max_budget
+    assert autotune_max_budget(FIELD_CFG, RCFG) is None
+    mem = autotune_max_budget(FIELD_CFG, RCFG, memory_bytes=2 << 20)
+    assert mem is not None and mem >= 512
+    assert mem & (mem - 1) == 0, "ceiling must be a power of two"
+    # a tighter memory envelope can only shrink the ceiling
+    assert autotune_max_budget(FIELD_CFG, RCFG, memory_bytes=1 << 20) <= mem
+    # latency cap: 2 ms at 1 us/point -> 2000 points, bucketed DOWN to 1024
+    lat = autotune_max_budget(FIELD_CFG, RCFG, latency_ms=2.0, us_per_point=1.0)
+    assert lat == 1024
+    # the binding (smaller) constraint wins
+    both = autotune_max_budget(FIELD_CFG, RCFG, memory_bytes=2 << 30,
+                               latency_ms=2.0, us_per_point=1.0)
+    assert both == 1024
+    # the floor is a floor even under a starved envelope
+    assert autotune_max_budget(FIELD_CFG, RCFG, memory_bytes=1024) == 512
+
+
 def _short_train(redistribute: bool, forbid_stage: bool = False, **cfg_kw):
     ds = build_dataset(seed=0, n_views=4, h=16, w=16, cfg=RCFG, gt_samples=48)[1]
     tcfg = TrainerConfig(

@@ -90,6 +90,13 @@ SPECS: dict[str, list[Rule]] = {
         # +0.3 dB at equal points is the full-run promise; smoke runs only
         # trajectory-compare against a smoke baseline
         Rule("psnr_rgb_delta_equal_points", min=0.3, full_only=True, abs_tol=0.5),
+        # v3 must hold what v2 won: >= 0 dB vs v2 at the same ceiling on
+        # full runs, with trajectory slack for seed-level wobble
+        Rule("psnr_rgb_delta_v3_vs_v2", min=0.0, full_only=True, abs_tol=0.3),
+        # cross-step encoding reuse must stay measurably nonzero; the
+        # trajectory tolerance guards against the schedule silently
+        # degrading to invalidate-everything
+        Rule("reuse.hit_rate", min=0.01, rel_tol=0.3),
     ],
     "BENCH_obs_overhead.json": [
         # the REPRO_OBS=off no-op span path must stay under 1% of a
