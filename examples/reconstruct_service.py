@@ -10,6 +10,12 @@ mid-training from the latest snapshot — coalesced across sessions into
 batched jitted renders.  Served views are scored against the scene's
 analytic ground truth, so you can watch per-scene PSNR climb while all
 scenes are still training.
+
+Fleet mode (docs/SERVING.md): --devices N shards the sessions across a
+device mesh (on CPU, run with
+XLA_FLAGS=--xla_force_host_platform_device_count=N), --snapshot-levels k
+streams cheap h>>k previews before each scene's first full snapshot, and
+--async-serving serves renders from a dedicated thread.
 """
 import argparse
 
@@ -33,6 +39,15 @@ def main():
                     help="train-cohort cap (default unlimited; 1 = pure time-slicing)")
     ap.add_argument("--dense-render", action="store_true",
                     help="serve views dense instead of redistributed")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard sessions across the first N local devices "
+                         "(on CPU: XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N)")
+    ap.add_argument("--snapshot-levels", type=int, default=0,
+                    help="publish h>>k preview snapshots until a scene's "
+                         "first full snapshot (0 = off)")
+    ap.add_argument("--async-serving", action="store_true",
+                    help="serve renders from a dedicated thread")
     ap.add_argument("--trace-out", default=None,
                     help="write a Chrome-trace JSON of the demo run")
     args = ap.parse_args()
@@ -54,7 +69,10 @@ def main():
     service = ReconstructionService(slice_iters=args.slice,
                                     max_resident=args.max_resident,
                                     max_cohort=args.max_cohort,
-                                    redistributed_render=not args.dense_render)
+                                    redistributed_render=not args.dense_render,
+                                    devices=args.devices,
+                                    snapshot_levels=args.snapshot_levels,
+                                    async_serving=args.async_serving)
     datasets = {}
     for i in range(args.scenes):
         _scene, ds = build_dataset(seed=i, n_views=6, h=args.hw, w=args.hw,
@@ -96,7 +114,8 @@ def main():
               f"psnr rgb {ev['psnr_rgb']:.2f} dB  depth {ev['psnr_depth']:.2f} dB  "
               f"(train {p['train_wall_s']:.1f}s)")
     r = tel["render"]
-    print(f"\n{tel['scenes_done']} scenes in {tel['wall_s']:.1f}s "
+    print(f"\n{tel['scenes_done']} scenes on {tel['devices']} device(s) "
+          f"in {tel['wall_s']:.1f}s "
           f"({tel['scenes_per_sec']:.3f} scenes/sec)  "
           f"renders {r.get('count', 0)}: p50 {r.get('p50_ms', 0):.0f} ms, "
           f"p95 {r.get('p95_ms', 0):.0f} ms")

@@ -111,6 +111,15 @@ def make_redistributed_render_chunk(field_cfg, render_cfg: rendering.RenderConfi
 _REDIST_RENDER_CACHE: dict[tuple, Any] = {}
 
 
+def default_samples_per_ray(n_samples: int) -> int:
+    """The serving default for the redistributed per-ray budget: S/4 (the
+    PR 4 equal-PSNR point), floored at 4 and capped at S.  One definition
+    shared by the serve3d service and `evaluate`, so offline eval and served
+    renders march the same quadrature by construction."""
+    s = int(n_samples)
+    return min(s, max(4, s // 4))
+
+
 def redistributed_render_fn(field_cfg, render_cfg: rendering.RenderConfig,
                             occ_cfg: occupancy.OccupancyConfig,
                             chunk: int, samples_per_ray: int,
@@ -124,6 +133,55 @@ def redistributed_render_fn(field_cfg, render_cfg: rendering.RenderConfig,
             redistribute_v3=bool(redistribute_v3),
         ))
     return _REDIST_RENDER_CACHE[key]
+
+
+# vmapped-over-sessions flavor of the eval renderers: same make_render_chunk
+# construction, keyed the same way plus the padded group size, so sessions
+# with different grid sizes can never share an entry.  Lives here (not in
+# serve3d.render) so `evaluate` and the serve3d RenderService hit the same
+# compiled functions — on XLA:CPU a vmapped group of 1 differs from the
+# unvmapped renderer by ~1 ulp, so sharing one entry point is what makes
+# "offline eval == served render" hold bit-for-bit, not just approximately.
+_BATCH_RENDER_CACHE: dict[tuple, Any] = {}
+
+
+def batched_render_fn(field_cfg, render_cfg: rendering.RenderConfig,
+                      chunk: int, group: int):
+    """(params stacked over G, origins (G,chunk,3), dirs (G,chunk,3),
+    ts (chunk,S)) -> (rgb (G,chunk,3), depth (G,chunk))."""
+    key = (field_cfg, render_cfg, int(chunk), int(group))
+    if key not in _BATCH_RENDER_CACHE:
+        _BATCH_RENDER_CACHE[key] = jax.jit(
+            jax.vmap(make_render_chunk(field_cfg, render_cfg),
+                     in_axes=(0, 0, 0, None))
+        )
+    return _BATCH_RENDER_CACHE[key]
+
+
+def batched_redistributed_render_fn(field_cfg, render_cfg: rendering.RenderConfig,
+                                    occ_cfg, chunk: int, group: int,
+                                    samples_per_ray: int,
+                                    redistribute_v3: bool = False):
+    """Redistributed flavor of `batched_render_fn`: adds per-session
+    occupancy (ema (G,R^3), fold count (G,)) inputs and shades only
+    chunk·samples_per_ray points per session instead of chunk·S.
+
+    redistribute_v3=True serves the density-weighted ragged path: the
+    coalescer's chunk budget is spent unevenly across the chunk's rays
+    (long live segments get more samples, packed Morton-ordered by the
+    pipeline's compact stage), with the snapshot EMA weighting in-ray
+    placement."""
+    key = (field_cfg, render_cfg, occ_cfg, int(chunk), int(group),
+           int(samples_per_ray), bool(redistribute_v3))
+    if key not in _BATCH_RENDER_CACHE:
+        _BATCH_RENDER_CACHE[key] = jax.jit(
+            jax.vmap(make_redistributed_render_chunk(
+                field_cfg, render_cfg, occ_cfg,
+                int(chunk) * int(samples_per_ray),
+                redistribute_v3=bool(redistribute_v3)),
+                in_axes=(0, 0, 0, None, 0, 0))
+        )
+    return _BATCH_RENDER_CACHE[key]
 
 
 def image_rays(pose, h: int, w: int, focal: float, eval_chunk: int):
@@ -603,27 +661,52 @@ class Instant3DTrainer:
 
     # ---- evaluation ----
 
-    def render_image(self, params, pose: np.ndarray, ds):
+    def render_image(self, params, pose: np.ndarray, ds, occ=None,
+                     samples_per_ray: int | None = None):
+        """Render one full view.  Dense by default; pass `occ` (the
+        (density EMA, fold count) pair `suspend`/serve3d snapshots carry) to
+        render through the configured redistribute variant instead — the
+        exact vmapped group-of-1 entry the serve3d RenderService coalesces
+        through, so an offline eval render is bit-identical to a served
+        render of the same snapshot."""
         cfg = self.cfg
         h, w = ds.h, ds.w
         o, d, n, chunk = image_rays(pose, h, w, ds.focal, cfg.eval_chunk)
         ts = rendering.sample_ts(None, chunk, cfg.render)
-        fn = eval_render_fn(self.field.cfg, cfg.render, chunk)
+        if occ is not None and cfg.use_occupancy:
+            spr = (int(samples_per_ray) if samples_per_ray is not None
+                   else default_samples_per_ray(cfg.render.n_samples))
+            fn_r = batched_redistributed_render_fn(
+                self.field.cfg, cfg.render, cfg.occ, chunk, 1, spr,
+                redistribute_v3=cfg.redistribute_v3)
+            occ_ema = jnp.asarray(occ[0])[None]
+            occ_step = jnp.asarray([int(occ[1])], jnp.int32)
+            stacked = jax.tree.map(lambda a: jnp.asarray(a)[None], params)
+            fn = lambda p, oo, dd, tt: fn_r(  # noqa: E731
+                stacked, oo[None], dd[None], tt, occ_ema, occ_step)
+        else:
+            fn = eval_render_fn(self.field.cfg, cfg.render, chunk)
         rgb_out, dep_out = [], []
         for i in range(0, o.shape[0], chunk):
             rgb_c, dep_c = fn(params, o[i : i + chunk], d[i : i + chunk], ts)
+            if rgb_c.ndim == 3:          # strip the group-of-1 axis
+                rgb_c, dep_c = rgb_c[0], dep_c[0]
             rgb_out.append(rgb_c)
             dep_out.append(dep_c)
         rgb = jnp.concatenate(rgb_out)[:n].reshape(h, w, 3)
         dep = jnp.concatenate(dep_out)[:n].reshape(h, w)
         return np.asarray(rgb), np.asarray(dep)
 
-    def evaluate(self, params, ds, views=None) -> dict:
-        """PSNR of rendered RGB and depth vs ground truth (paper Fig. 5 stats)."""
+    def evaluate(self, params, ds, views=None, occ=None,
+                 samples_per_ray: int | None = None) -> dict:
+        """PSNR of rendered RGB and depth vs ground truth (paper Fig. 5
+        stats).  With `occ`, views render through the redistribute variant
+        (see `render_image`) so eval marches the serving quadrature."""
         views = views if views is not None else range(min(4, ds.images.shape[0]))
         rgb_ps, dep_ps = [], []
         for v in views:
-            rgb, dep = self.render_image(params, ds.poses[v], ds)
+            rgb, dep = self.render_image(params, ds.poses[v], ds, occ=occ,
+                                         samples_per_ray=samples_per_ray)
             rgb_ps.append(float(losses.psnr(jnp.asarray(rgb), jnp.asarray(ds.images[v]))))
             # depth normalized to [0,1] over the far range for a bounded PSNR
             far = self.cfg.render.far

@@ -1,8 +1,53 @@
-"""Production mesh construction (function, not constant — importing this
-module never touches jax device state)."""
+"""Mesh construction (function, not constant — importing this module never
+touches jax device state).
+
+Two families live here:
+
+* **LM-stack meshes** (`make_production_mesh`, `make_host_mesh`) — the 2D/3D
+  data×model meshes the transformer sharding rules in
+  `repro.parallel.sharding` partition over.  These use the new-style
+  `jax.make_mesh(..., axis_types=...)` API and require a jax with
+  `jax.sharding.AxisType`.
+* **serve3d session meshes** (`session_devices`, `session_mesh`) — the 1D
+  device list/mesh the reconstruction service shards *sessions* (not
+  tensors) over.  Each session's whole state lives on one device
+  (`serve3d.placement`), so no partition specs are needed and the helpers
+  stay compatible with every jax this repo supports.  On CPU,
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` provides N
+  virtual devices for tests and benchmarks.
+"""
 from __future__ import annotations
 
 import jax
+
+
+def session_devices(n: int | None = None) -> list:
+    """The first `n` local devices (all of them when n is None) — the
+    substrate `serve3d.placement.DevicePlacement` spreads sessions over.
+    Raises when more devices are requested than the platform offers, so a
+    misconfigured fleet fails loudly at construction, not mid-serving."""
+    devs = list(jax.devices())
+    if n is None:
+        return devs
+    n = int(n)
+    if n < 1:
+        raise ValueError(f"need at least one device, got n={n}")
+    if n > len(devs):
+        raise ValueError(
+            f"requested {n} devices but only {len(devs)} are available "
+            f"(on CPU, set XLA_FLAGS=--xla_force_host_platform_device_count={n})"
+        )
+    return devs[:n]
+
+
+def session_mesh(n: int | None = None):
+    """1D ('session',) mesh over `session_devices(n)`.  Plain
+    `jax.sharding.Mesh` — works on every supported jax version; sessions are
+    placed whole-state-per-device, so the mesh is bookkeeping/introspection,
+    not a partitioning contract."""
+    import numpy as np
+
+    return jax.sharding.Mesh(np.array(session_devices(n)), ("session",))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

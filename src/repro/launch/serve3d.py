@@ -13,6 +13,11 @@ published snapshots through the redistributed render path (--dense-render
 for the dense fallback).  A session guard (on by default — docs/ROBUSTNESS.md)
 rolls diverged slices back to the last good checkpoint and quarantines
 repeat offenders; --chaos demos it by injecting a NaN fault mid-run.
+Fleet scale (docs/SERVING.md): --devices N shards sessions across a device
+mesh (one cohort per device per quantum; on CPU pair it with
+XLA_FLAGS=--xla_force_host_platform_device_count=N), --snapshot-levels k
+streams cheap previews before the first full snapshot, and --async-serving
+moves render drains onto a dedicated serving thread.
 Prints per-session progress plus aggregate scenes/sec, render-latency
 percentiles, and guard telemetry.
 """
@@ -57,6 +62,9 @@ def build_service(args) -> tuple[ReconstructionService, dict]:
         guard=guard,
         render_deadline_s=args.render_deadline,
         shed_threshold=args.shed_threshold,
+        devices=args.devices,
+        snapshot_levels=args.snapshot_levels,
+        async_serving=args.async_serving,
     )
     datasets = {}
     for i in range(args.scenes):
@@ -111,6 +119,18 @@ def main(argv=None):
     ap.add_argument("--shed-threshold", type=int, default=None,
                     help="ready-request queue depth that triggers quality "
                          "shedding (halved samples per ray) before drops")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard sessions across the first N local devices "
+                         "(session mesh; default: single-device service). "
+                         "On CPU, force a mesh with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    ap.add_argument("--snapshot-levels", type=int, default=0,
+                    help="preview snapshot level k: publish cheap h>>k "
+                         "previews every healthy slice until a scene's first "
+                         "full snapshot lands (0 = full snapshots only)")
+    ap.add_argument("--async-serving", action="store_true",
+                    help="drive renders from a dedicated serving thread "
+                         "instead of draining at the end of each quantum")
     ap.add_argument("--chaos", action="store_true",
                     help="demo fault injection: poison scene-001's params "
                          "with NaN mid-run and watch the guard roll it back")
@@ -177,8 +197,11 @@ def main(argv=None):
         print(f"  {p['session_id']}: {p['status']} step {p['step']}/{p['target_iters']} "
               f"loss {p['loss']:.5f} train {p['train_wall_s']:.1f}s")
     r = tel["render"]
-    print(f"\nscenes/sec {tel['scenes_per_sec']:.3f}  renders {r.get('count', 0)}  "
+    print(f"\ndevices {tel['devices']}  scenes/sec {tel['scenes_per_sec']:.3f}  "
+          f"renders {r.get('count', 0)}  "
           f"p50 {r.get('p50_ms', float('nan')):.0f} ms  p95 {r.get('p95_ms', float('nan')):.0f} ms")
+    if tel["placement"] is not None:
+        print(f"placement loads {tel['placement']['loads']}")
     g = tel.get("guard")
     if g is not None:
         print(f"guard: rollbacks {g['rollbacks']}  "

@@ -1,11 +1,14 @@
 """serve3d — multi-scene reconstruction service (Instant-3D as a service
-primitive: accept scene jobs, time-slice the device across concurrent
-training sessions, serve batched novel-view renders from published
-snapshots while training continues, and survive divergence/crash faults
-via guard rollback and graceful render degradation)."""
+primitive: accept scene jobs, shard sessions across a device mesh and
+time-slice each device across its concurrent training sessions, serve
+batched novel-view renders from published snapshots — routed to the device
+holding each scene, optionally from a dedicated async serving thread —
+while training continues, and survive divergence/crash faults via guard
+rollback and graceful render degradation)."""
 from .session import (  # noqa: F401
     SceneSession, PENDING, ACTIVE, SUSPENDED, DONE, QUARANTINED,
 )
+from .placement import DevicePlacement  # noqa: F401
 from .scheduler import SessionScheduler  # noqa: F401
 from .snapshot import Snapshot, SnapshotStore  # noqa: F401
 from .render import (  # noqa: F401

@@ -109,15 +109,20 @@ class SessionGuard:
     # ---- inspection (called by the service after every quantum) ----
 
     def inspect(self, sessions: list[SceneSession],
-                error: Exception | None = None) -> dict[str, str]:
+                error: Exception | None = None,
+                errors: dict[str, Exception] | None = None) -> dict[str, str]:
         """Health-check every session advanced this quantum.  Returns a
         verdict per session id: ``ok``, ``rolled_back`` or ``quarantined``.
         `error` is an exception captured from inside the slice — it fails
-        every member (donated buffers make partial state untrustworthy)."""
+        every member (donated buffers make partial state untrustworthy).
+        `errors` is the per-session form (multi-device quanta run one
+        cohort per device, so a fault on one device fails only its own
+        cohort's members); when given it takes precedence."""
         t0 = obs_trace.clock()
         verdicts = {}
         for s in sessions:
-            verdicts[s.session_id] = self._inspect_one(s, error)
+            e = errors.get(s.session_id, None) if errors is not None else error
+            verdicts[s.session_id] = self._inspect_one(s, e)
         self.inspect_wall_s += obs_trace.clock() - t0
         return verdicts
 

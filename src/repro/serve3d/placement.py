@@ -1,0 +1,116 @@
+"""DevicePlacement: session -> device affinity for the sharded service.
+
+The fleet-scale contract (docs/SERVING.md): every admitted session is
+assigned one *mesh slot* (a device) and its entire training state — params,
+optimizer moments, occupancy grid — lives on that device until the session
+finishes or is explicitly moved.  Sessions are sharded, tensors are not:
+no partition specs, no collectives, and the bit-identity invariants of the
+single-device service carry over unchanged (training math never crosses a
+device boundary).
+
+Policy: **deterministic least-loaded**.  `assign` picks the slot with the
+fewest live assigned sessions, breaking ties toward the lowest slot index,
+and is *sticky* — re-assigning an already-placed session returns its
+existing slot, so suspend/resume round-trips keep their device affinity.
+An explicit `move` re-homes a session (used with suspend/resume: suspend
+pulls state to host, move retargets the slot, resume materializes on the
+new device — bit-identical, because resume is bit-exact and the training
+streams are keyed by absolute step, not by device).
+
+`release` drops a finished/quarantined session from the load accounting so
+its slot capacity returns to the admission pool — the scheduler's
+``max_resident`` is interpreted *per device* when a placement is attached,
+which is what makes total residency scale with device count.
+
+Determinism: with the same submission order and the same device count,
+assignments are reproducible — the N=1 degenerate case places everything on
+device 0 (the process default device) and the service is bit-identical to
+the placement-free path, gated by ``scale_out.n1_bit_identical`` in
+BENCH_serve3d.json.
+"""
+from __future__ import annotations
+
+from ..launch.mesh import session_devices
+
+
+class DevicePlacement:
+    def __init__(self, devices=None):
+        """devices: an int (use the first n local devices), an explicit
+        device list, or None (all local devices)."""
+        if devices is None or isinstance(devices, int):
+            devices = session_devices(devices)
+        self.devices = list(devices)
+        if not self.devices:
+            raise ValueError("DevicePlacement needs at least one device")
+        self._slot: dict[str, int] = {}     # session_id -> slot index
+        self._load: list[int] = [0] * len(self.devices)
+        self._released: set[str] = set()    # finished: off the load books
+
+    @property
+    def n(self) -> int:
+        return len(self.devices)
+
+    # ---- assignment ----
+
+    def assign(self, session_id: str) -> int:
+        """Sticky least-loaded slot for this session (ties -> lowest slot)."""
+        slot = self._slot.get(session_id)
+        if slot is not None:
+            return slot
+        slot = min(range(self.n), key=lambda i: (self._load[i], i))
+        self._slot[session_id] = slot
+        self._load[slot] += 1
+        return slot
+
+    def move(self, session_id: str, slot: int | None = None) -> int:
+        """Re-home a session: to an explicit slot, or to the least-loaded
+        other slot (the rebalance move).  The caller owns the state motion
+        (suspend before, resume after); this only retargets the affinity."""
+        old = self._slot.get(session_id)
+        if old is None:
+            raise KeyError(f"unplaced session {session_id!r}")
+        if slot is None:
+            others = [i for i in range(self.n) if i != old] or [old]
+            slot = min(others, key=lambda i: (self._load[i], i))
+        slot = int(slot)
+        if not 0 <= slot < self.n:
+            raise ValueError(f"slot {slot} out of range for {self.n} devices")
+        if slot != old:
+            if session_id not in self._released:
+                self._load[old] -= 1
+                self._load[slot] += 1
+            self._slot[session_id] = slot
+        return slot
+
+    def release(self, session_id: str) -> None:
+        """Drop a finished/quarantined session from the load accounting.
+        The slot *mapping* survives — render routing keeps resolving the
+        scene's published snapshots to its device — but the slot's capacity
+        returns to the admission pool."""
+        slot = self._slot.get(session_id)
+        if slot is not None and session_id not in self._released:
+            self._released.add(session_id)
+            self._load[slot] -= 1
+
+    # ---- lookup ----
+
+    def slot(self, session_id: str) -> int | None:
+        return self._slot.get(session_id)
+
+    def device(self, session_id: str):
+        """The device holding this session's state (None when unplaced)."""
+        slot = self._slot.get(session_id)
+        return None if slot is None else self.devices[slot]
+
+    def device_for_slot(self, slot: int):
+        return self.devices[slot]
+
+    def loads(self) -> list[int]:
+        return list(self._load)
+
+    def stats(self) -> dict:
+        return {
+            "devices": [str(d) for d in self.devices],
+            "loads": self.loads(),
+            "placed": dict(self._slot),
+        }

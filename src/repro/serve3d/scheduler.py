@@ -33,8 +33,22 @@ compatible sessions ride along — a deliberate throughput-over-latency
 trade, since the cohort slice advances M scenes in less wall time than M
 quanta but takes longer than the urgent session's solo slice.
 
+Device mesh (``placement``; see docs/SERVING.md): with a `DevicePlacement`
+attached, every admitted session is assigned a mesh slot (sticky
+least-loaded), ``max_resident`` is interpreted *per device* so total
+residency scales with device count, and each quantum advances one cohort
+per device — concurrently via a small thread pool when more than one slot
+has work.  Cohort keys carry the device axis, so cohorts never straddle
+devices and co-located config-matched sessions still batch.  Per-session
+training math is untouched by placement (whole-state-per-device, no
+collectives), so every bit-identity invariant of the single-device
+scheduler carries over; N=1 degenerates to the placement-free path
+bit-for-bit.
+
 Fault tolerance (see `serve3d.guard`): with ``capture_errors`` on, an
 exception escaping a training slice is caught and parked in ``last_error``
+(and per-session in ``last_errors`` — under a multi-device quantum a fault
+on one device must only fail that device's cohort)
 for the guard to turn into rollbacks instead of killing the quantum loop.
 Sessions in guard backoff (``hold_until`` in the future) are skipped by
 selection, QUARANTINED sessions are terminal (excluded from `live`, so one
@@ -47,6 +61,7 @@ via the slice-credit mechanism (reschedule, never block) and counted in
 from __future__ import annotations
 
 import time
+from concurrent.futures import ThreadPoolExecutor
 
 from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
@@ -59,17 +74,25 @@ class SessionScheduler:
                  max_resident: int | None = None,
                  max_cohort: int | None = 1,
                  straggler_sigma: float = 4.0,
-                 straggler_alpha: float = 0.25):
+                 straggler_alpha: float = 0.25,
+                 placement=None):
         """max_cohort: largest train cohort formed around a quantum's primary
         session — 1 disables cohort formation (pure time-slicing, the
         PR 2 behavior), None removes the cap (every key-matching session
-        rides along)."""
+        rides along).
+
+        placement: a `serve3d.placement.DevicePlacement` sharding admitted
+        sessions over a device mesh.  With one attached, ``max_resident``
+        is a *per-device* cap and each quantum advances one cohort per
+        device (the multi-device quantum)."""
         if policy not in ("round_robin", "edf"):
             raise ValueError(f"unknown policy {policy!r}")
         self.slice_iters = int(slice_iters)
         self.policy = policy
         self.max_resident = max_resident
         self.max_cohort = max_cohort
+        self.placement = placement
+        self._pool: ThreadPoolExecutor | None = None
         self.sessions: list[SceneSession] = []
         self._rr = 0  # round-robin cursor
         # sessions advanced as non-primary cohort members hold a slice
@@ -82,6 +105,9 @@ class SessionScheduler:
         # of unwinding the service loop
         self.capture_errors = False
         self.last_error: Exception | None = None
+        # per-session view of the same thing: under a multi-device quantum a
+        # slice exception fails only its own device's cohort members
+        self.last_errors: dict[str, Exception] = {}
         # straggler watchdog: per-session EWMA of slice wall time
         self.straggler_sigma = float(straggler_sigma)
         self.straggler_alpha = float(straggler_alpha)
@@ -107,14 +133,21 @@ class SessionScheduler:
 
     # ---- slot admission (continuous-batching idiom) ----
 
-    def _resident_count(self) -> int:
-        return sum(1 for s in self.sessions if s.resident and s.status != DONE)
+    def _resident_count(self, slot: int | None = None) -> int:
+        return sum(1 for s in self.sessions
+                   if s.resident and s.status != DONE
+                   and (slot is None or s.device_slot == slot))
 
     def _admit(self):
         """Fill free slots with queued sessions: submission order under
         round-robin, most-urgent-first under EDF.  Residents are never
         preempted — EDF governs admission of queued jobs and selection among
-        active ones, not eviction."""
+        active ones, not eviction.
+
+        With a placement, admission also assigns the mesh slot (sticky
+        least-loaded) and the residency cap applies per device — a full
+        device defers only its *own* queued sessions (affinity holds across
+        suspend/resume), so total residency scales with the mesh."""
         cap = self.max_resident if self.max_resident is not None else len(self.sessions)
         queued = [s for s in self.sessions if s.status in (PENDING, SUSPENDED)]
         if self.policy == "edf":
@@ -122,7 +155,13 @@ class SessionScheduler:
                                        (s.submitted_at + s.deadline)
                                        if s.deadline is not None else 0.0))
         for s in queued:
-            if self._resident_count() >= cap:
+            if self.placement is not None:
+                slot = self.placement.assign(s.session_id)
+                if self._resident_count(slot) >= cap:
+                    continue
+                if s.device_slot != slot:
+                    s.place(self.placement.device_for_slot(slot), slot)
+            elif self._resident_count() >= cap:
                 break
             if s.status == PENDING:
                 s.start()
@@ -145,6 +184,18 @@ class SessionScheduler:
             time.sleep(max(0.0, min(s.hold_until for s in live) - now))
             now = obs_trace.clock()
             ready = live
+        return self._select(ready, now, slot=None)
+
+    def _select(self, ready: list[SceneSession], now: float,
+                slot: int | None) -> SceneSession | None:
+        """Policy selection over an already-admitted ready set; with `slot`,
+        only that device's sessions are considered (the per-device leg of a
+        multi-device quantum — selection never sleeps there, an idle device
+        simply sits the quantum out)."""
+        if slot is not None:
+            ready = [s for s in ready if s.device_slot == slot]
+            if not ready:
+                return None
         if self.policy == "edf":
             # deadlines outrank slice credits: an urgent session is never
             # skipped because it already rode along in someone's cohort
@@ -158,7 +209,8 @@ class SessionScheduler:
         for _ in range(2 * len(self.sessions)):
             s = self.sessions[self._rr % len(self.sessions)]
             self._rr += 1
-            if s.status == ACTIVE and s.hold_until <= now:
+            if s.status == ACTIVE and s.hold_until <= now and \
+                    (slot is None or s.device_slot == slot):
                 if self._credit.get(s.session_id, 0) > 0:
                     self._credit[s.session_id] -= 1
                     continue
@@ -187,7 +239,13 @@ class SessionScheduler:
         """Run one scheduling quantum: pick a primary session, form its
         train cohort, advance the whole cohort one slice, then reset the
         slot of any member that finished (admitting the next queued job).
-        Returns the primary; `last_trained` lists every advanced session."""
+        Returns the primary; `last_trained` lists every advanced session.
+
+        With a multi-device placement, one cohort per device advances
+        concurrently (see `_step_multi`); the returned primary is the
+        lowest slot's."""
+        if self.placement is not None and self.placement.n > 1:
+            return self._step_multi()
         primary = self.next_session()
         if primary is None:
             self.last_trained = []
@@ -195,11 +253,27 @@ class SessionScheduler:
         cohort = self.cohort_for(primary)
         if obs_trace.enabled():
             obs_metrics.gauge("serve3d.cohort_size").set(len(cohort))
-        t0 = obs_trace.clock()
         self.last_error = None
+        self.last_errors = {}
+        err, wall = self._run_cohort(cohort)
+        if err is not None:
+            self.last_error = err
+            self.last_errors = {m.session_id: err for m in cohort}
+        else:
+            self._watch_stragglers(cohort, wall)
+        self._finish_members(cohort)
+        self.last_trained = cohort
+        return primary
+
+    def _run_cohort(self, cohort: list[SceneSession]) -> tuple:
+        """Advance one cohort one slice.  Returns (error, wall_s); with
+        ``capture_errors`` the error is parked for the guard — every member
+        gets rolled back (donated buffers make partially-advanced state
+        untrustworthy), no rider credits, no straggler sample."""
+        t0 = obs_trace.clock()
         try:
             if len(cohort) == 1:
-                primary.run_slice(self.slice_iters)
+                cohort[0].run_slice(self.slice_iters)
             else:
                 SceneSession.run_cohort_slice(cohort, self.slice_iters)
                 for rider in cohort[1:]:
@@ -208,16 +282,12 @@ class SessionScheduler:
         except Exception as e:
             if not self.capture_errors:
                 raise
-            # park it for the guard: every member gets rolled back (donated
-            # buffers make partially-advanced state untrustworthy), no
-            # rider credits, no straggler sample
-            self.last_error = e
-        else:
-            self._watch_stragglers(cohort, obs_trace.clock() - t0)
-        finished = False
-        for s in cohort:
+            return e, obs_trace.clock() - t0
+        return None, obs_trace.clock() - t0
+
+    def _finish_members(self, trained: list[SceneSession]):
+        for s in trained:
             if s.status == DONE:
-                finished = True
                 self._credit.pop(s.session_id, None)
                 if self.max_resident is not None and s.resident:
                     # bounded residency: a finished job must actually release
@@ -225,10 +295,70 @@ class SessionScheduler:
                     # cap (publish/evaluate still work from the suspended
                     # host tree)
                     s.suspend(block=False)
-        if finished:
+                if self.placement is not None:
+                    # slot load returns to the admission pool; the mapping
+                    # itself survives so snapshot render routing keeps
+                    # working for the finished scene
+                    self.placement.release(s.session_id)
+        if any(s.status == DONE for s in trained):
             self._admit()  # slot reset: finished jobs' slots go to the queue
-        self.last_trained = cohort
-        return primary
+
+    def _step_multi(self) -> SceneSession | None:
+        """The multi-device quantum: admit, pick one primary per mesh slot,
+        and advance every slot's cohort concurrently (one driver thread per
+        busy device — Python dispatch for one device overlaps XLA execution
+        on the others).  Per-session training math is identical to the
+        single-device path; only wall-clock interleaving changes, and
+        training streams are keyed by absolute step, so results stay
+        bit-identical to any sequential schedule of the same slices."""
+        self._admit()
+        self.last_error = None
+        self.last_errors = {}
+        now = obs_trace.clock()
+        live = [s for s in self.sessions if s.status == ACTIVE]
+        ready = [s for s in live if s.hold_until <= now]
+        if live and not ready:
+            # every active session is in guard backoff: sleep to the
+            # earliest release instead of busy-spinning the quantum loop
+            time.sleep(max(0.0, min(s.hold_until for s in live) - now))
+            now = obs_trace.clock()
+            ready = live
+        work: list[tuple[int, SceneSession, list[SceneSession]]] = []
+        for slot in range(self.placement.n):
+            primary = self._select(ready, now, slot=slot)
+            if primary is not None:
+                work.append((slot, primary, self.cohort_for(primary)))
+        if not work:
+            self.last_trained = []
+            return None
+        if obs_trace.enabled():
+            obs_metrics.gauge("serve3d.cohort_size").set(
+                max(len(c) for _, _, c in work))
+            obs_metrics.gauge("serve3d.devices_busy").set(len(work))
+        if len(work) == 1:
+            outcomes = [self._run_cohort(work[0][2])]
+        else:
+            outcomes = list(self._ensure_pool().map(
+                lambda w: self._run_cohort(w[2]), work))
+        trained: list[SceneSession] = []
+        for (slot, _primary, cohort), (err, wall) in zip(work, outcomes):
+            trained.extend(cohort)
+            if err is not None:
+                self.last_errors.update({m.session_id: err for m in cohort})
+                if self.last_error is None:
+                    self.last_error = err
+            else:
+                self._watch_stragglers(cohort, wall)
+        self._finish_members(trained)
+        self.last_trained = trained
+        return work[0][1]
+
+    def _ensure_pool(self) -> ThreadPoolExecutor:
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.placement.n,
+                thread_name_prefix="serve3d-dev")
+        return self._pool
 
     def _watch_stragglers(self, cohort: list[SceneSession], wall_s: float):
         """Per-session EWMA watchdog over slice wall time (the TrainDriver

@@ -29,13 +29,29 @@ session is quarantined and its last-good snapshot keeps being served,
 annotated stale.  A failed publish (the store raised before its atomic
 swap) is retried on the next quantum.  Pass ``guard=None``/``False`` for
 the fail-fast PR 5 behavior where any slice error unwinds `run`.
+
+Fleet scale (docs/SERVING.md): ``devices=N`` shards sessions across the
+first N local devices through a `DevicePlacement` — per-device residency
+caps, one train cohort per device per quantum (concurrent driver threads),
+render groups routed to the device holding their sessions' state.  Faults
+stay per-device: the scheduler's per-session error capture means one
+device's crashed slice rolls back only that device's cohort.
+``snapshot_levels=k`` publishes cheap level-k *previews* every healthy
+slice until a session's first full snapshot lands (progressive streaming);
+``async_serving=True`` moves the render drain onto a dedicated serving
+thread so render latency stops being gated by the in-flight training
+slice.  All three default off; N=1 with everything off is bit-identical to
+the pre-mesh service.
 """
 from __future__ import annotations
+
+import time
 
 from ..obs import export as obs_export
 from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
 from .guard import GuardConfig, SessionGuard
+from .placement import DevicePlacement
 from .render import RenderService
 from .scheduler import SessionScheduler
 from .session import DONE, QUARANTINED, SceneSession
@@ -56,6 +72,9 @@ class ReconstructionService:
         guard: GuardConfig | bool | None = True,
         render_deadline_s: float | None = None,
         shed_threshold: int | None = None,
+        devices=None,
+        snapshot_levels: int = 0,
+        async_serving: bool = False,
     ):
         """snapshot_every: publish a session's snapshot every k-th slice it
         trains (its final slice always publishes).
@@ -79,14 +98,31 @@ class ReconstructionService:
 
         render_deadline_s / shed_threshold: per-request render deadline
         inherited by `request_render` and the queue depth that triggers
-        quality shedding — both forwarded to `RenderService`."""
+        quality shedding — both forwarded to `RenderService`.
+
+        devices: shard sessions over a device mesh — an int (first n local
+        devices), a device list, or None (single-device service, no
+        placement).  With a placement, ``max_resident`` caps residency *per
+        device*.
+
+        snapshot_levels: 0 disables previews; k > 0 publishes a level-k
+        preview snapshot after every healthy slice of a session that has no
+        full snapshot yet, so level-k render requests are answerable before
+        the first ``snapshot_every``-gated full publish.
+
+        async_serving: `run` drives renders from a dedicated serving thread
+        (`RenderService.start_async`) instead of draining synchronously at
+        the end of each quantum."""
+        self.placement = (DevicePlacement(devices)
+                          if devices is not None else None)
         self.store = SnapshotStore(persist_dir=persist_dir)
         self.renderer = RenderService(self.store,
                                       default_deadline_s=render_deadline_s,
-                                      shed_threshold=shed_threshold)
+                                      shed_threshold=shed_threshold,
+                                      placement=self.placement)
         self.scheduler = SessionScheduler(
             slice_iters=slice_iters, policy=policy, max_resident=max_resident,
-            max_cohort=max_cohort,
+            max_cohort=max_cohort, placement=self.placement,
         )
         if guard is True:
             guard = GuardConfig()
@@ -98,6 +134,8 @@ class ReconstructionService:
         self._publish_retry: set[str] = set()
         self.sessions: dict[str, SceneSession] = {}
         self.snapshot_every = max(1, int(snapshot_every))
+        self.snapshot_levels = max(0, int(snapshot_levels))
+        self.async_serving = bool(async_serving)
         self.redistributed_render = bool(redistributed_render)
         self.render_samples_per_ray = render_samples_per_ray
         # serving clock starts at the first quantum, not construction, so
@@ -138,6 +176,9 @@ class ReconstructionService:
             spr = (self.render_samples_per_ray
                    if self.render_samples_per_ray is not None
                    else min(s, max(4, s // 4)))
+        # the session's offline `evaluate` marches the same serving path at
+        # the same budget, so eval and served renders agree bit for bit
+        sess.render_spr = spr
         self.renderer.register_session(
             sid, field_cfg, trainer_cfg.render,
             dataset.h, dataset.w, dataset.focal, trainer_cfg.eval_chunk,
@@ -149,8 +190,12 @@ class ReconstructionService:
         )
         return sid
 
-    def request_render(self, session_id: str, pose) -> int:
-        return self.renderer.submit(session_id, pose)
+    def request_render(self, session_id: str, pose,
+                       deadline_s: float | None = None, level: int = 0) -> int:
+        """level 0 = full resolution (waits for a full snapshot); k > 0 =
+        the h>>k preview, answerable by a preview snapshot."""
+        return self.renderer.submit(session_id, pose,
+                                    deadline_s=deadline_s, level=level)
 
     # ---- the serving loop ----
 
@@ -167,8 +212,10 @@ class ReconstructionService:
             sess = self.scheduler.step()
             verdicts: dict[str, str] = {}
             if self.guard is not None and self.scheduler.last_trained:
-                verdicts = self.guard.inspect(self.scheduler.last_trained,
-                                              error=self.scheduler.last_error)
+                verdicts = self.guard.inspect(
+                    self.scheduler.last_trained,
+                    error=self.scheduler.last_error,
+                    errors=self.scheduler.last_errors or None)
             for member in self.scheduler.last_trained:
                 verdict = verdicts.get(member.session_id, "ok")
                 if verdict != "ok":
@@ -178,6 +225,7 @@ class ReconstructionService:
                         # scene's renders terminate (served stale) even if
                         # the session never published before
                         self._publish(member)
+                        self._retire(member.session_id)
                     continue
                 slices = len(member.telemetry["step"])
                 # a finished session may already be suspended (bounded
@@ -186,7 +234,22 @@ class ReconstructionService:
                         or slices % self.snapshot_every == 0
                         or member.session_id in self._publish_retry):
                     self._publish(member)
-            results = self.renderer.drain()
+                elif (self.snapshot_levels > 0
+                      and self.store.latest(member.session_id, level=0) is None):
+                    # progressive streaming: until the first full snapshot
+                    # lands, every healthy slice publishes a cheap preview so
+                    # early level-k render requests have something to serve
+                    self._publish(member, level=self.snapshot_levels)
+                if member.status == DONE:
+                    # previews did their job; the full snapshot keeps serving
+                    self.store.gc_previews(member.session_id)
+            if self.renderer.async_active:
+                # the serving thread owns the drain; hand it fresh snapshots
+                # and collect what it finished since last quantum
+                self.renderer.notify()
+                results = self.renderer.poll_results()
+            else:
+                results = self.renderer.drain()
         if obs_trace.enabled():
             obs_metrics.counter("serve3d.quanta").inc()
             obs_metrics.gauge("serve3d.sessions_active").set(sum(
@@ -200,37 +263,68 @@ class ReconstructionService:
             "results": results,
         }
 
-    def _publish(self, member: SceneSession) -> None:
+    def _publish(self, member: SceneSession, level: int = 0) -> None:
         """Publish with retry-on-failure: the store's swap is atomic, so a
         raise means the previous snapshot is still the latest — remember the
-        session and try again next quantum instead of unwinding the loop."""
+        session and try again next quantum instead of unwinding the loop.
+        (Only full publishes arm the retry — a lost preview is re-attempted
+        by the next healthy slice anyway.)"""
         try:
-            member.publish(self.store)
+            member.publish(self.store, level=level)
         except Exception:
             if self.guard is None:
                 raise
             self.publish_failures += 1
-            self._publish_retry.add(member.session_id)
+            if level == 0:
+                self._publish_retry.add(member.session_id)
             if obs_trace.enabled():
                 obs_metrics.counter("serve3d.snapshot.publish_failures").inc()
         else:
-            self._publish_retry.discard(member.session_id)
+            if level == 0:
+                self._publish_retry.discard(member.session_id)
             if self.guard is None or member.session_id not in \
                     self.guard.quarantined:
                 self.renderer.mark_stale(member.session_id, False)
 
+    def _retire(self, session_id: str) -> None:
+        """A terminal (quarantined) session stops holding mesh capacity and
+        preview snapshots; its full snapshot keeps being served."""
+        self.store.gc_previews(session_id)
+        if self.placement is not None:
+            self.placement.release(session_id)
+
     def run(self, hook=None, max_quanta: int = 100_000) -> dict:
-        """Drive quanta until every session is done and the render queue is
-        empty.  `hook(service, event)` runs after each quantum — the place to
+        """Drive quanta until every session is done, the render queue is
+        empty and (async serving) the serving thread has gone idle.
+        `hook(service, event)` runs after each quantum — the place to
         submit mid-training render requests or stream telemetry."""
-        for _ in range(max_quanta):
-            if self.scheduler.all_done and self.renderer.pending == 0:
-                break
-            # step() drains even once training is done, so straggler requests
-            # still flow through the hook as ordinary events
-            event = self.step()
-            if hook is not None:
-                hook(self, event)
+        if self.async_serving and not self.renderer.async_active:
+            self.renderer.start_async()
+        try:
+            for _ in range(max_quanta):
+                if self.scheduler.all_done and self.renderer.pending == 0 \
+                        and self.renderer.idle:
+                    break
+                # step() drains even once training is done, so straggler
+                # requests still flow through the hook as ordinary events
+                event = self.step()
+                if hook is not None:
+                    hook(self, event)
+                if event["trained"] is None and self.renderer.async_active:
+                    # nothing left to train: we are only waiting on the
+                    # serving thread — yield the GIL instead of busy-spinning
+                    # it into starvation (first-contact drains trace per-device
+                    # renderers, which is pure Python work)
+                    time.sleep(0.002)
+        finally:
+            if self.renderer.async_active:
+                # flush: join the serving thread, then deliver anything it
+                # finished after the last quantum as one final event
+                self.renderer.stop_async()
+                final = self.renderer.poll_results()
+                if final and hook is not None:
+                    hook(self, {"trained": None, "cohort": [], "step": None,
+                                "guard": {}, "results": final})
         self.store.wait()
         return self.telemetry()
 
@@ -252,6 +346,10 @@ class ReconstructionService:
             "guard": self.guard.stats() if self.guard is not None else None,
             "publish_failures": self.publish_failures,
             "stragglers_flagged": self.scheduler.stragglers_flagged,
+            "devices": self.placement.n if self.placement is not None else 1,
+            "placement": (self.placement.stats()
+                          if self.placement is not None else None),
+            "async_serving": self.async_serving,
         }
 
     def metrics(self) -> dict:

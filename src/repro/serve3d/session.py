@@ -31,6 +31,7 @@ checkpoint (the fresh-process path).
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from typing import Any
 
@@ -78,11 +79,38 @@ class SceneSession:
         self.ckpt = CheckpointManager(ckpt_dir, keep_last=2) if ckpt_dir else None
         self.state: TrainState | None = None
         self._host_tree: dict | None = None
+        # device affinity (serve3d.placement): every jax entry point below
+        # runs under `jax.default_device(self.device)`, so the session's
+        # whole state lives on its assigned mesh slot.  None = process
+        # default device, the single-device path.
+        self.device = None
+        self.device_slot: int | None = None
+        # samples-per-ray the service serves this session's renders at
+        # (None = dense) — `evaluate` routes through the same stage-2b
+        # variant so offline eval and served views march one quadrature
+        self.render_spr: int | None = None
         self.status = PENDING
         self.hold_until = 0.0  # guard backoff: scheduler skips until this clock
         self.submitted_at = obs_trace.clock()
         self.train_wall_s = 0.0
         self.telemetry: dict[str, list] = {"step": [], "loss": [], "live_fraction": []}
+
+    # ---- device affinity (serve3d.placement) ----
+
+    def place(self, device, slot: int | None = None) -> None:
+        """Pin this session to a mesh slot.  Legal while the session holds
+        no device state (before `start`, or suspended mid-move): the next
+        `start`/`resume` materializes on the new device.  Training streams
+        are keyed by absolute step, so a device move is bit-transparent."""
+        assert self.state is None, \
+            f"{self.session_id}: suspend before moving a resident session"
+        self.device = device
+        self.device_slot = slot
+
+    def _device_ctx(self):
+        if self.device is None:
+            return contextlib.nullcontext()
+        return jax.default_device(self.device)
 
     # ---- lifecycle ----
 
@@ -105,7 +133,8 @@ class SceneSession:
 
     def start(self):
         assert self.status == PENDING, f"cannot start from {self.status}"
-        self.state = self.trainer.init(jax.random.PRNGKey(self.seed))
+        with self._device_ctx():
+            self.state = self.trainer.init(jax.random.PRNGKey(self.seed))
         self.status = ACTIVE
 
     def run_slice(self, n_iters: int) -> dict:
@@ -122,10 +151,12 @@ class SceneSession:
         t0 = obs_trace.clock()
         with obs_trace.span("serve3d/slice", cat="serve3d",
                             args={"session": self.session_id, "iters": n,
-                                  "step": int(self.step)}):
-            self.state, hist = self.trainer.train(
-                self.state, self.sampler, iters=n, log_every=n
-            )
+                                  "step": int(self.step),
+                                  "device": self.device_slot}):
+            with self._device_ctx():
+                self.state, hist = self.trainer.train(
+                    self.state, self.sampler, iters=n, log_every=n
+                )
         if inj is not None:
             self._post_slice_fault(inj, hist)
         self._record_slice(hist, obs_trace.clock() - t0)
@@ -165,11 +196,14 @@ class SceneSession:
 
     def cohort_key(self) -> tuple:
         """Sessions whose keys match can advance through one member-axis
-        compiled train step: identical field/trainer configs (the compiled
-        shapes and the shared-seed sample/ts streams) and the same absolute
-        step (the freeze schedule, occupancy cadence and stream keys are all
-        functions of it)."""
-        return (self.field_cfg, self.trainer_cfg, self.step)
+        compiled train step: the same device slot (a cohort's stacked state
+        must live on one device; None = the unplaced single-device path),
+        identical field/trainer configs (the compiled shapes and the
+        shared-seed sample/ts streams) and the same absolute step (the
+        freeze schedule, occupancy cadence and stream keys are all functions
+        of it).  Config-matched sessions co-located on a device still batch;
+        the device axis only splits cohorts across slots."""
+        return (self.device_slot, self.field_cfg, self.trainer_cfg, self.step)
 
     @staticmethod
     def run_cohort_slice(sessions: "list[SceneSession]", n_iters: int) -> int:
@@ -200,13 +234,15 @@ class SceneSession:
         t0 = obs_trace.clock()
         with obs_trace.span("serve3d/slice", cat="serve3d",
                             args={"cohort": len(sessions), "iters": n,
-                                  "step": int(sessions[0].step)}):
-            states, hists = train_cohort(
-                [s.trainer for s in sessions],
-                [s.state for s in sessions],
-                [s.sampler for s in sessions],
-                iters=n, log_every=n,
-            )
+                                  "step": int(sessions[0].step),
+                                  "device": sessions[0].device_slot}):
+            with sessions[0]._device_ctx():
+                states, hists = train_cohort(
+                    [s.trainer for s in sessions],
+                    [s.state for s in sessions],
+                    [s.sampler for s in sessions],
+                    iters=n, log_every=n,
+                )
         dt = (obs_trace.clock() - t0) / len(sessions)
         for s, st, hist, inj in zip(sessions, states, hists, injs):
             s.state = st
@@ -239,7 +275,8 @@ class SceneSession:
                 self.trainer.init(jax.random.PRNGKey(self.seed))
             )
             tree, _meta = self.ckpt.restore(template)
-        self.state = self.trainer.resume(tree)
+        with self._device_ctx():
+            self.state = self.trainer.resume(tree)
         self._host_tree = None
         self.status = DONE if self.done else ACTIVE
 
@@ -289,23 +326,39 @@ class SceneSession:
                     int(self._host_tree["occ_step"]))
         raise RuntimeError(f"{self.session_id}: no trained state yet")
 
-    def publish(self, store) -> "Any":
-        """Publish current params + occupancy to a SnapshotStore (atomic swap)."""
+    def publish(self, store, level: int = 0) -> "Any":
+        """Publish current params + occupancy to a SnapshotStore (atomic
+        swap).  level 0 is the full-resolution snapshot; level k > 0 marks a
+        *preview* — same params, but renders resolve at h>>k (progressive
+        streaming; see docs/SERVING.md)."""
         meta = {
             "loss": float(self.telemetry["loss"][-1]) if self.telemetry["loss"] else None,
             "train_wall_s": self.train_wall_s,
         }
         return store.publish(self.session_id, self._current_params(), self.step,
-                             meta, occ=self._current_occ())
+                             meta, occ=self._current_occ(), level=level)
 
     def evaluate(self, views=None) -> dict:
-        """PSNR of the *current* params against this session's ground truth."""
-        return self.trainer.evaluate(self._current_params(), self.dataset, views=views)
+        """PSNR of the *current* params against this session's ground truth.
+
+        Served through the same quadrature the session's renders use: when
+        the service registered this session for redistributed serving
+        (``render_spr``), eval routes through the trainer's stage-2b
+        variant with the current occupancy state — bit-for-bit the served
+        render path, closing the train/eval quadrature mismatch.  Dense
+        otherwise (standalone sessions keep the historical behavior)."""
+        occ = None
+        if self.render_spr is not None and self.trainer_cfg.use_occupancy:
+            occ = self._current_occ()
+        return self.trainer.evaluate(self._current_params(), self.dataset,
+                                     views=views, occ=occ,
+                                     samples_per_ray=self.render_spr)
 
     def progress(self) -> dict:
         return {
             "session_id": self.session_id,
             "status": self.status,
+            "device": self.device_slot,
             "step": self.step,
             "target_iters": self.target_iters,
             "loss": self.telemetry["loss"][-1] if self.telemetry["loss"] else None,

@@ -7,7 +7,18 @@ complete record first and then swaps one dict slot under a lock, so a reader
 always sees either the previous or the new snapshot, never a torn mix of
 params from one step and metadata from another.
 
-With `persist_dir` set, each publish also lands in a per-session
+Snapshot **levels** (progressive streaming; docs/SERVING.md): level 0 is
+the full-resolution snapshot, level k > 0 marks a *preview* — the same
+params, but render requests against it resolve at h>>k.  A session early in
+its life publishes previews every healthy slice until its first level-0
+snapshot lands, so clients get a cheap usable view quickly; `latest`
+prefers the full snapshot and falls back to the best (lowest-level)
+preview, and `gc_previews` drops a dead session's previews so a long-lived
+store holds exactly one full snapshot per scene at steady state.  Versions
+are monotone per *session* across levels, so a renderer can always order
+what it saw.  Only level-0 snapshots persist to disk.
+
+With `persist_dir` set, each full publish also lands in a per-session
 `CheckpointManager` directory (atomic tmp+rename commit protocol), so a
 service restart can re-serve every scene's latest published view without
 retraining.
@@ -42,26 +53,31 @@ class Snapshot(NamedTuple):
     # session's occupancy bitfield from this, so serving needs no live
     # trainer state — same immutability contract as params.
     occ: Any = None
+    # 0 = full resolution; k > 0 = preview (renders resolve at h>>k)
+    level: int = 0
 
 
 class SnapshotStore:
     def __init__(self, persist_dir: str | None = None, keep_last: int = 2):
-        self._latest: dict[str, Snapshot] = {}
+        # session -> level -> latest snapshot at that level
+        self._latest: dict[str, dict[int, Snapshot]] = {}
+        self._versions: dict[str, int] = {}
         self._lock = threading.Lock()
         self.persist_dir = persist_dir
         self.keep_last = keep_last
         self._ckpts: dict[str, CheckpointManager] = {}
 
     def publish(self, session_id: str, params, step: int, meta: dict | None = None,
-                occ=None) -> Snapshot:
+                occ=None, level: int = 0) -> Snapshot:
         """Copy params (+ occupancy) to host and atomically make them the
-        session's latest."""
+        session's latest at `level`."""
         with obs_trace.span("serve3d/snapshot_publish", cat="serve3d",
-                            args={"session": session_id, "step": int(step)}):
-            return self._publish(session_id, params, step, meta, occ)
+                            args={"session": session_id, "step": int(step),
+                                  "level": int(level)}):
+            return self._publish(session_id, params, step, meta, occ, int(level))
 
     def _publish(self, session_id: str, params, step: int, meta: dict | None,
-                 occ) -> Snapshot:
+                 occ, level: int) -> Snapshot:
         inj = faults.check("serve3d.snapshot_publish", session=session_id,
                            step=int(step))
         if inj is not None and inj.kind == "snapshot_fail":
@@ -72,19 +88,23 @@ class SnapshotStore:
             jax.device_get(occ[0]), int(occ[1])
         )
         with self._lock:
-            prev = self._latest.get(session_id)
+            version = self._versions.get(session_id, 0) + 1
+            self._versions[session_id] = version
             snap = Snapshot(
                 session_id=session_id,
-                version=(prev.version + 1) if prev else 1,
+                version=version,
                 step=int(step),
                 params=host,
                 meta=dict(meta or {}),
                 occ=host_occ,
+                level=level,
             )
-            self._latest[session_id] = snap
+            self._latest.setdefault(session_id, {})[level] = snap
         if obs_trace.enabled():
             obs_metrics.counter("serve3d.snapshots_published").inc()
-        if self.persist_dir is not None:
+            if level > 0:
+                obs_metrics.counter("serve3d.previews_published").inc()
+        if self.persist_dir is not None and level == 0:
             ckpt = self._ckpts.get(session_id)
             if ckpt is None:
                 ckpt = self._ckpts[session_id] = CheckpointManager(
@@ -98,9 +118,36 @@ class SnapshotStore:
                       extra={"version": snap.version, **snap.meta})
         return snap
 
-    def latest(self, session_id: str) -> Snapshot | None:
+    def latest(self, session_id: str, level: int | None = None) -> Snapshot | None:
+        """The session's latest snapshot: at exactly `level` when given,
+        otherwise the full snapshot, falling back to the best (lowest-level)
+        preview while no full one exists."""
         with self._lock:
-            return self._latest.get(session_id)
+            by_level = self._latest.get(session_id)
+            if not by_level:
+                return None
+            if level is not None:
+                return by_level.get(int(level))
+            return by_level.get(0) or by_level[min(by_level)]
+
+    def gc_previews(self, session_id: str) -> int:
+        """Drop every preview (level > 0) for a dead/finished session;
+        returns the number collected.  The full snapshot stays — a finished
+        scene keeps being servable forever."""
+        with self._lock:
+            by_level = self._latest.get(session_id)
+            if not by_level:
+                return 0
+            previews = [lv for lv in by_level if lv > 0]
+            for lv in previews:
+                del by_level[lv]
+        if previews and obs_trace.enabled():
+            obs_metrics.counter("serve3d.previews_gcd").inc(len(previews))
+        return len(previews)
+
+    def levels(self, session_id: str) -> list[int]:
+        with self._lock:
+            return sorted(self._latest.get(session_id, {}))
 
     def sessions(self) -> list[str]:
         with self._lock:

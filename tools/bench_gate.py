@@ -117,6 +117,18 @@ SPECS: dict[str, list[Rule]] = {
         # must never roll back a fault-free run (false-positive detector)
         Rule("guard.overhead_frac", max=0.01),
         Rule("guard.rollbacks", max=0),
+        # scale-out (device-mesh session sharding, forced 4-device child):
+        # scenes/sec must be monotone non-decreasing in device count with a
+        # strict 1 -> 4 win (full runs only — smoke slices are too short to
+        # resolve the dispatch/compute overlap), and the N=1 placement must
+        # degenerate bit-identically to the placement-free pre-mesh path
+        Rule("scale_out.scenes_per_s_monotone", min=1, full_only=True),
+        Rule("scale_out.n1_bit_identical", flag=True),
+        # mixed train+render load on the full mesh, async plane, per-device
+        # render executables pre-warmed: steady-state p95 stays interactive
+        # and trajectory-tracks the committed baseline (measured ~0.8 s on
+        # this container at smoke scale)
+        Rule("scale_out.render_p95_ms_mixed", max=5_000.0, rel_tol=0.5),
     ],
     "BENCH_robustness.json": [
         # the chaos run's recovery contract: faults fire, every session
